@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Returns (result, best_us)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def header(title: str):
+    print(f"\n=== {title} ===")

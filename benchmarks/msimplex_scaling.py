@@ -1,0 +1,32 @@
+"""Beyond-paper extension: bounding-box waste vs simplex dimension.
+
+The paper measures m=2 (~50% waste) and m=3 (~83%); the generalized
+m-simplex map (core/msimplex.py) shows the mapped kernel's advantage grows
+as 1 - 1/m! — at m=5 the BB strategy wastes >99% of blocks.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.msimplex import block_accounting_msimplex, map_msimplex
+
+
+def run(n_points: int = 1_000_000) -> dict:
+    header("m-simplex generalization: BB waste vs dimension (N = 1e6)")
+    print(f"{'m':>3s}{'side':>7s}{'valid blk':>11s}{'bb blk':>14s}"
+          f"{'waste':>9s}{'1-1/m!':>9s}")
+    out = {}
+    for m in (2, 3, 4, 5, 6):
+        acc = block_accounting_msimplex(n_points, m)
+        print(f"{m:>3d}{acc['side']:>7d}{acc['valid_blocks']:>11,}"
+              f"{acc['bb_blocks']:>14,}{acc['waste_fraction']:>9.2%}"
+              f"{acc['asymptotic_waste']:>9.2%}")
+        out[m] = acc["waste_fraction"]
+        # map sanity at this dimension
+        assert map_msimplex(0, m) == (0,) * m
+    emit("msimplex_waste_scaling", 0.0,
+         ";".join(f"m{m}={w:.3f}" for m, w in out.items()))
+    return out
+
+
+if __name__ == "__main__":
+    run()

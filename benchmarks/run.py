@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Emits one ``name,us_per_call,derived`` CSV row per benchmark (benchmarks
+also print their human-readable tables above the CSV rows).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="validate at the paper's 10^6 points (slower)")
+    p.add_argument("--only", default=None,
+                   help="accuracy|fig5|dense|fractal|attn")
+    args = p.parse_args()
+
+    n_val = 1_000_000 if args.full else 100_000
+    sample = 200 if args.full else 50
+
+    from benchmarks import (  # noqa: PLC0415
+        accuracy_tables, attn_kernel, block_dense, block_fractal,
+        energy_efficiency, msimplex_scaling,
+    )
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    failures = []
+    suites = {
+        "accuracy": lambda: accuracy_tables.run(n_val, sample),
+        "fig5": lambda: energy_efficiency.run(min(n_val, 50_000), sample),
+        "dense": block_dense.run,
+        "fractal": block_fractal.run,
+        "attn": attn_kernel.run,
+        "msimplex": msimplex_scaling.run,
+    }
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # pragma: no cover
+            import traceback
+
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+    if failures:
+        print(f"[benchmarks] FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

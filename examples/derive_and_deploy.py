@@ -1,0 +1,40 @@
+"""Full derivation sweep: every domain x a chosen model, with deployment
+accounting — the operational framework of paper Fig. 3 over all six domains.
+
+    PYTHONPATH=src python examples/derive_and_deploy.py [model]
+"""
+import sys
+
+from repro.core.backends import MockLLMBackend
+from repro.core.domains import DOMAINS
+from repro.core.energy import estimate_bounding_box, estimate_mapped
+from repro.core.pipeline import derive_mapping
+
+model = sys.argv[1] if len(sys.argv) > 1 else "OSS:120b"
+backend = MockLLMBackend(model)
+N_DEPLOY = 500_000_000
+
+print(f"model = {backend.name}\n")
+print(f"{'domain':22s}{'stage':>6s}{'ordered':>9s}{'any':>8s}{'class':>10s}"
+      f"{'speedup':>9s}{'energy x':>9s}")
+for name, dom in sorted(DOMAINS.items()):
+    best = None
+    for stage in (20, 50, 100):
+        res = derive_mapping(dom, backend, stage, n_validate=50_000,
+                             sample_every=10)
+        if best is None or res.report.ordered > best[1].report.ordered:
+            best = (stage, res)
+    stage, res = best
+    if res.perfect:
+        logic = ("analytical" if dom.kind == "dense" else "bitwise")
+        bb = estimate_bounding_box(dom, N_DEPLOY)
+        mp = estimate_mapped(dom, logic, N_DEPLOY)
+        sp = f"{bb.time_ms / mp.time_ms:8.0f}x"
+        ex = f"{bb.energy_j / mp.energy_j:8.0f}x"
+    else:
+        sp = ex = "      --"
+    print(f"{dom.paper_name:22s}{stage:>6d}{res.report.ordered_pct:>8.1f}%"
+          f"{res.report.any_order_pct:>7.1f}%"
+          f"{str(res.complexity_class):>10s}{sp}{ex}")
+print("\n'--' rows: the model never derived a perfect map (e.g. the paper's "
+      "'Menger limit'); deployment falls back to the bounding-box kernel.")

@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill + greedy decode with per-family KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [arch]   # default yi-6b smoke
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
+    sys.argv = [sys.argv[0], "--arch", arch, "--smoke", "--batch", "4",
+                "--prompt-len", "24", "--max-new", "24"]
+    main()

@@ -1,0 +1,30 @@
+"""End-to-end training driver: train a ~100M-parameter llama-family model
+for a few hundred steps with the full substrate (sharding, checkpointing,
+fault tolerance, synthetic data).
+
+Default invocation is CPU-sized so it finishes in minutes; --full runs the
+actual ~100M config (same code path, longer):
+
+    PYTHONPATH=src python examples/train_lm.py              # ~20M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --full       # ~100M, 300 steps
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    full = "--full" in sys.argv
+    argv = [a for a in sys.argv[1:] if a != "--full"]
+    if full:
+        # 103M params: llama3.2 family (tied embeds), d=384 L=8 ff=3072
+        preset = ["--arch", "llama3.2-3b", "--d-model", "384",
+                  "--n-layers", "8", "--d-ff", "3072", "--steps", "300",
+                  "--batch", "8", "--seq", "512",
+                  "--ckpt-dir", "/tmp/repro_train_full", "--log-every", "20"]
+    else:
+        preset = ["--arch", "llama3.2-3b", "--smoke", "--d-model", "128",
+                  "--n-layers", "6", "--steps", "120", "--batch", "8",
+                  "--seq", "128", "--ckpt-dir", "/tmp/repro_train",
+                  "--log-every", "20"]
+    sys.argv = [sys.argv[0]] + preset + argv
+    main()

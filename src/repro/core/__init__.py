@@ -1,0 +1,6 @@
+"""Core library: the paper's contribution — automated derivation and
+deployment of exact thread-mapping functions for non-box domains."""
+from repro.core.domains import DOMAINS, Domain, get_domain  # noqa: F401
+from repro.core.maps import SCALAR_MAPS, VARIANT_MAPS, jnp_map, np_map  # noqa: F401
+from repro.core.pipeline import DerivationResult, derive_mapping  # noqa: F401
+from repro.core.validate import ValidationReport  # noqa: F401

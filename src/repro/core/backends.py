@@ -1,0 +1,461 @@
+"""Phase 2 — Symbolic Inference backends.
+
+`LLMBackend` is the pluggable protocol; `MockLLMBackend` deterministically
+replays the behaviour the paper measured per (model, domain, stage) cell so
+the whole pipeline — prompt building, code extraction, synthesis, validation,
+energy accounting, deployment — runs end-to-end offline.  `OllamaBackend`
+shows the production wiring for real local models (paper Sec. V ran GGUF
+models under default parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Protocol
+
+import numpy as np
+
+from repro.core import paper_tables as pt
+from repro.core.domains import Domain
+
+# ---------------------------------------------------------------------------
+# Appendix A prompt
+# ---------------------------------------------------------------------------
+
+PROMPT_TEMPLATE = """<ROLE>
+Act as an expert in mathematics and cryptography, specializing in the reverse
+engineering of algorithms and the identification of complex patterns in
+multidimensional spaces. Your goal is SOLELY to generate the Python code
+requested.
+</ROLE>
+
+<TASK>
+Analyze the mapping data in the <CONTEXT> to find the underlying mathematical
+algorithm.
+
+Then, generate the complete source code for a single Python function that
+implements this general algorithm.
+</TASK>
+
+<CONTEXT>
+# Mapping Data
+{mapping_data}
+</CONTEXT>
+
+<RULES>
+- Function name must be exactly `map_to_coordinates(n)`.
+- Input: 'n' (non-negative integer).
+- Output: tuple of integers representing coordinates.
+- Each integer within the returned coordinate tuple must be greater than or
+  equal to 0.
+- Validate input 'n' (non-negative integer), raise 'ValueError' if invalid.
+- **CRITICAL ALGORITHM CONSTRAINT:** The function MUST implement a general
+  mathematical algorithm that works for ANY non-negative integer 'n', not just
+  the examples provided.
+- **DO NOT use hardcoded values, lookup tables, or long 'if/elif' chains based
+  on ranges of 'n'.**
+- **CRITICAL OUTPUT CONSTRAINT:** Your response MUST contain ONLY the Python
+  code block for the function.
+- **DO NOT include ANY introductory text, explanations, reasoning, thought
+  processes, or comments.**
+- Do NOT include an 'if __name__ == "__main__":' block.
+</RULES>
+
+<RESPONSE>
+"""
+
+
+def sample_context(domain: Domain, stage: int) -> np.ndarray:
+    """Phase 1 — Context Sampling: first `stage` points (sequential CPU)."""
+    return domain.enumerate_points(stage)
+
+
+def build_prompt(domain: Domain, stage: int) -> str:
+    pts = sample_context(domain, stage)
+    lines = [f"{i} -> {tuple(int(v) for v in p)}" for i, p in enumerate(pts)]
+    return PROMPT_TEMPLATE.format(mapping_data="\n".join(lines))
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LLMResponse:
+    text: str
+    model: str
+    tokens_in: int
+    tokens_out: int
+    seconds: float
+    joules: float
+
+
+class LLMBackend(Protocol):
+    name: str
+
+    def generate(self, prompt: str, *, meta: dict) -> LLMResponse: ...
+
+
+# ---------------------------------------------------------------------------
+# Code templates the mock backend emits, per (domain, logic-class)
+# ---------------------------------------------------------------------------
+
+_HDR = (
+    "def map_to_coordinates(n):\n"
+    "    if not isinstance(n, int) or isinstance(n, bool) or n < 0:\n"
+    "        raise ValueError('n must be a non-negative integer')\n"
+)
+
+CODE_TEMPLATES: dict[tuple[str, str], str] = {
+    ("tri2d", "analytical"): (
+        "import math\n" + _HDR +
+        "    x = (math.isqrt(8 * n + 1) - 1) // 2\n"
+        "    y = n - x * (x + 1) // 2\n"
+        "    return (x, y)\n"
+    ),
+    ("tri2d", "sqrt_loop"): (
+        _HDR +
+        "    x = int((2.0 * n) ** 0.5)\n"
+        "    while (x + 1) * (x + 2) // 2 <= n:\n"
+        "        x += 1\n"
+        "    while x * (x + 1) // 2 > n:\n"
+        "        x -= 1\n"
+        "    return (x, n - x * (x + 1) // 2)\n"
+    ),
+    ("tri2d", "binsearch"): (
+        _HDR +
+        "    lo, hi = 0, 1\n"
+        "    while hi * (hi + 1) // 2 <= n:\n"
+        "        hi *= 2\n"
+        "    while lo < hi:\n"
+        "        mid = (lo + hi + 1) // 2\n"
+        "        if mid * (mid + 1) // 2 <= n:\n"
+        "            lo = mid\n"
+        "        else:\n"
+        "            hi = mid - 1\n"
+        "    return (lo, n - lo * (lo + 1) // 2)\n"
+    ),
+    ("tri2d", "approx_if"): (
+        _HDR +
+        "    x = int(((8.0 * n + 1.0) ** 0.5 - 1.0) / 2.0)\n"
+        "    if (x + 1) * (x + 2) // 2 <= n:\n"
+        "        x += 1\n"
+        "    if x * (x + 1) // 2 > n:\n"
+        "        x -= 1\n"
+        "    return (x, n - x * (x + 1) // 2)\n"
+    ),
+    ("pyramid3d", "analytical"): (
+        "import math\n" + _HDR +
+        "    z = int((6.0 * n) ** (1.0 / 3.0))\n"
+        "    if (z + 1) * (z + 2) * (z + 3) // 6 <= n:\n"
+        "        z += 1\n"
+        "    if z > 0 and z * (z + 1) * (z + 2) // 6 > n:\n"
+        "        z -= 1\n"
+        "    if z > 0 and z * (z + 1) * (z + 2) // 6 > n:\n"
+        "        z -= 1\n"
+        "    r = n - z * (z + 1) * (z + 2) // 6\n"
+        "    x = (math.isqrt(8 * r + 1) - 1) // 2\n"
+        "    y = r - x * (x + 1) // 2\n"
+        "    return (x, y, z)\n"
+    ),
+    ("pyramid3d", "cbrt_loop"): (
+        "import math\n" + _HDR +
+        "    z = int(round((6.0 * n) ** (1.0 / 3.0)))\n"
+        "    while (z + 1) * (z + 2) * (z + 3) // 6 <= n:\n"
+        "        z += 1\n"
+        "    while z > 0 and z * (z + 1) * (z + 2) // 6 > n:\n"
+        "        z -= 1\n"
+        "    r = n - z * (z + 1) * (z + 2) // 6\n"
+        "    x = (math.isqrt(8 * r + 1) - 1) // 2\n"
+        "    return (x, r - x * (x + 1) // 2, z)\n"
+    ),
+    ("pyramid3d", "binsearch"): (
+        "import math\n" + _HDR +
+        "    lo, hi = 0, 1\n"
+        "    while hi * (hi + 1) * (hi + 2) // 6 <= n:\n"
+        "        hi *= 2\n"
+        "    while lo < hi:\n"
+        "        mid = (lo + hi + 1) // 2\n"
+        "        if mid * (mid + 1) * (mid + 2) // 6 <= n:\n"
+        "            lo = mid\n"
+        "        else:\n"
+        "            hi = mid - 1\n"
+        "    r = n - lo * (lo + 1) * (lo + 2) // 6\n"
+        "    x = (math.isqrt(8 * r + 1) - 1) // 2\n"
+        "    return (x, r - x * (x + 1) // 2, lo)\n"
+    ),
+    ("pyramid3d", "binsearch_linear"): (
+        "import math\n" + _HDR +
+        "    hi = 1\n"
+        "    while hi * (hi + 1) * (hi + 2) // 6 <= n:\n"
+        "        hi *= 2\n"
+        "    z = 0\n"
+        "    while (z + 1) * (z + 2) * (z + 3) // 6 <= n:\n"
+        "        z += 1\n"
+        "    r = n - z * (z + 1) * (z + 2) // 6\n"
+        "    y = 0\n"
+        "    while (y + 1) * (y + 2) // 2 <= r:\n"
+        "        y += 1\n"
+        "    return (y, r - y * (y + 1) // 2, z)\n"
+    ),
+    ("pyramid3d", "linear"): (
+        _HDR +
+        "    z = 0\n"
+        "    while (z + 1) * (z + 2) * (z + 3) // 6 <= n:\n"
+        "        z += 1\n"
+        "    r = n - z * (z + 1) * (z + 2) // 6\n"
+        "    x = 0\n"
+        "    while (x + 1) * (x + 2) // 2 <= r:\n"
+        "        x += 1\n"
+        "    return (x, r - x * (x + 1) // 2, z)\n"
+    ),
+    ("gasket2d", "bitwise"): (
+        _HDR +
+        "    x = 0\n    y = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        d = m % 3\n"
+        "        if d == 1:\n            x += s\n"
+        "        elif d == 2:\n            y += s\n"
+        "        m //= 3\n        s *= 2\n"
+        "    return (x, y)\n"
+    ),
+    ("carpet2d", "bitwise"): (
+        _HDR +
+        "    cells = ((0, 0), (0, 1), (0, 2), (1, 0), (1, 2), (2, 0), (2, 1), (2, 2))\n"
+        "    x = 0\n    y = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        vx, vy = cells[m % 8]\n"
+        "        x += vx * s\n        y += vy * s\n"
+        "        m //= 8\n        s *= 3\n"
+        "    return (x, y)\n"
+    ),
+    ("sierpinski3d", "bitwise"): (
+        _HDR +
+        "    x = 0\n    y = 0\n    z = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        d = m % 4\n"
+        "        if d == 1:\n            x += s\n"
+        "        elif d == 2:\n            y += s\n"
+        "        elif d == 3:\n            z += s\n"
+        "        m //= 4\n        s *= 2\n"
+        "    return (x, y, z)\n"
+    ),
+    ("menger3d", "bitwise"): (
+        _HDR +
+        "    cells = ((0, 0, 0), (0, 0, 1), (0, 0, 2), (0, 1, 0), (0, 1, 2),\n"
+        "             (0, 2, 0), (0, 2, 1), (0, 2, 2), (1, 0, 0), (1, 0, 2),\n"
+        "             (1, 2, 0), (1, 2, 2), (2, 0, 0), (2, 0, 1), (2, 0, 2),\n"
+        "             (2, 1, 0), (2, 1, 2), (2, 2, 0), (2, 2, 1), (2, 2, 2))\n"
+        "    x = 0\n    y = 0\n    z = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        vx, vy, vz = cells[m % 20]\n"
+        "        x += vx * s\n        y += vy * s\n        z += vz * s\n"
+        "        m //= 20\n        s *= 3\n"
+        "    return (x, y, z)\n"
+    ),
+}
+
+# canonical *failure* modes for non-perfect cells ---------------------------
+
+_FAIL_2D_ROWMAJOR = (
+    _HDR +
+    "    width = 1000\n"
+    "    return (n // width, n % width)\n"
+)
+_FAIL_3D_ROWMAJOR = (
+    _HDR +
+    "    side = 100\n"
+    "    return (n // (side * side), (n // side) % side, n % side)\n"
+)
+_FAIL_WRONG_BASE_2D = (
+    _HDR +
+    "    x = 0\n    y = 0\n    s = 1\n    m = n\n"
+    "    while m > 0:\n"
+    "        d = m % 4\n"
+    "        if d == 1:\n            x += s\n"
+    "        elif d == 2:\n            y += s\n"
+    "        elif d == 3:\n            x += s\n            y += s\n"
+    "        m //= 4\n        s *= 2\n"
+    "    return (x, y)\n"
+)
+_FAIL_WRONG_BASE_3D = (
+    _HDR +
+    "    x = 0\n    y = 0\n    z = 0\n    s = 1\n    m = n\n"
+    "    while m > 0:\n"
+    "        d = m % 8\n"
+    "        x += (d & 1) * s\n"
+    "        y += ((d >> 1) & 1) * s\n"
+    "        z += ((d >> 2) & 1) * s\n"
+    "        m //= 8\n        s *= 2\n"
+    "    return (x, y, z)\n"
+)
+# correct geometry, permuted traversal order ("silver standard")
+_PERMUTED = {
+    "tri2d": (
+        "import math\n" + _HDR +
+        "    x = (math.isqrt(8 * n + 1) - 1) // 2\n"
+        "    y = n - x * (x + 1) // 2\n"
+        "    return (x, x - y)\n"  # column order reversed within each row
+    ),
+    "pyramid3d": (
+        "import math\n" + _HDR +
+        "    z = int(round((6.0 * n) ** (1.0 / 3.0)))\n"
+        "    while (z + 1) * (z + 2) * (z + 3) // 6 <= n:\n"
+        "        z += 1\n"
+        "    while z > 0 and z * (z + 1) * (z + 2) // 6 > n:\n"
+        "        z -= 1\n"
+        "    r = n - z * (z + 1) * (z + 2) // 6\n"
+        "    x = (math.isqrt(8 * r + 1) - 1) // 2\n"
+        "    y = r - x * (x + 1) // 2\n"
+        "    return (x, x - y, z)\n"
+    ),
+    "gasket2d": (
+        _HDR +
+        "    x = 0\n    y = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        d = m % 3\n"
+        "        if d == 1:\n            y += s\n"  # axes swapped
+        "        elif d == 2:\n            x += s\n"
+        "        m //= 3\n        s *= 2\n"
+        "    return (x, y)\n"
+    ),
+    "carpet2d": (
+        _HDR +
+        "    cells = ((0, 0), (1, 0), (2, 0), (0, 1), (2, 1), (0, 2), (1, 2), (2, 2))\n"
+        "    x = 0\n    y = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        vx, vy = cells[m % 8]\n"
+        "        x += vx * s\n        y += vy * s\n"
+        "        m //= 8\n        s *= 3\n"
+        "    return (x, y)\n"
+    ),
+    "sierpinski3d": (
+        _HDR +
+        "    x = 0\n    y = 0\n    z = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        d = m % 4\n"
+        "        if d == 1:\n            z += s\n"
+        "        elif d == 2:\n            y += s\n"
+        "        elif d == 3:\n            x += s\n"
+        "        m //= 4\n        s *= 2\n"
+        "    return (x, y, z)\n"
+    ),
+    "menger3d": (
+        _HDR +
+        "    cells = ((0, 0, 0), (1, 0, 0), (2, 0, 0), (0, 1, 0), (2, 1, 0),\n"
+        "             (0, 2, 0), (1, 2, 0), (2, 2, 0), (0, 0, 1), (2, 0, 1),\n"
+        "             (0, 2, 1), (2, 2, 1), (0, 0, 2), (1, 0, 2), (2, 0, 2),\n"
+        "             (0, 1, 2), (2, 1, 2), (0, 2, 2), (1, 2, 2), (2, 2, 2))\n"
+        "    x = 0\n    y = 0\n    z = 0\n    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        "        vx, vy, vz = cells[m % 20]\n"
+        "        x += vx * s\n        y += vy * s\n        z += vz * s\n"
+        "        m //= 20\n        s *= 3\n"
+        "    return (x, y, z)\n"
+    ),
+}
+_NONCOMPILING = "def map_to_coordinates(n:\n    return (n,\n"
+
+
+def mock_behavior(domain: str, model: str, stage: int) -> tuple[str, str]:
+    """(behavior-class, code) the replay bank emits for one table cell."""
+    stage_idx = pt.STAGES.index(stage)
+    ordered, any_order, compiled = pt.ACCURACY[domain][model][stage_idx]
+    if not compiled:
+        return "noncompiling", _NONCOMPILING
+    if ordered >= 100.0:
+        logic = pt.LOGIC_CLASS_OVERRIDES.get(
+            (domain, model, stage),
+            "analytical" if domain in ("tri2d", "pyramid3d") else "bitwise",
+        )
+        return logic, CODE_TEMPLATES[(domain, logic)]
+    if any_order >= 5.0:  # geometry mostly right, order wrong
+        return "permuted", _PERMUTED[domain]
+    if domain in ("tri2d", "pyramid3d"):
+        return "rowmajor_fit", (_FAIL_2D_ROWMAJOR if domain == "tri2d"
+                                else _FAIL_3D_ROWMAJOR)
+    return "wrong_base", (_FAIL_WRONG_BASE_2D if domain in ("gasket2d", "carpet2d")
+                          else _FAIL_WRONG_BASE_3D)
+
+
+# ---------------------------------------------------------------------------
+# Model priors for the energy/time model of the inference phase (Sec. V.B).
+# params in billions; tps = generation tok/s on 4xA100 (modeled priors);
+# reasoning models multiply emitted tokens by the CoT factor.
+# ---------------------------------------------------------------------------
+
+MODEL_SPECS = {
+    "R1:70b":      dict(params_b=70.6, tps=28.0, cot_factor=12.0, power_w=1100.0),
+    "Gem3:12b":    dict(params_b=12.2, tps=95.0, cot_factor=1.0, power_w=700.0),
+    "Gem3:27b":    dict(params_b=27.4, tps=55.0, cot_factor=1.0, power_w=850.0),
+    "OSS:120b":    dict(params_b=116.8, tps=45.0, cot_factor=3.0, power_w=1250.0),
+    "OSS:20b":     dict(params_b=20.9, tps=120.0, cot_factor=3.0, power_w=750.0),
+    "Lla3.3:70b":  dict(params_b=70.6, tps=30.0, cot_factor=1.0, power_w=1100.0),
+    "Lla4:16x17b": dict(params_b=108.6, tps=60.0, cot_factor=1.0, power_w=1200.0),
+    "Mist-N:12b":  dict(params_b=12.2, tps=100.0, cot_factor=1.0, power_w=700.0),
+    "Nemo:70b":    dict(params_b=70.6, tps=30.0, cot_factor=1.0, power_w=1100.0),
+    "Qw3:235b":    dict(params_b=235.1, tps=18.0, cot_factor=4.0, power_w=1400.0),
+    "Qw3:32b":     dict(params_b=32.8, tps=50.0, cot_factor=4.0, power_w=900.0),
+}
+
+
+class MockLLMBackend:
+    """Deterministic replay of the paper's measured per-cell behaviour."""
+
+    def __init__(self, model: str):
+        if model not in pt.MODELS:
+            raise ValueError(f"unknown model {model!r}; have {pt.MODELS}")
+        self.name = model
+        self.spec = MODEL_SPECS[model]
+
+    def generate(self, prompt: str, *, meta: dict) -> LLMResponse:
+        domain, stage = meta["domain"], meta["stage"]
+        _, code = mock_behavior(domain, self.name, stage)
+        tokens_in = max(len(prompt) // 4, 1)
+        code_tokens = max(len(code) // 4, 1)
+        tokens_out = int(code_tokens * self.spec["cot_factor"])
+        seconds = tokens_out / self.spec["tps"] + tokens_in / (self.spec["tps"] * 8)
+        joules = seconds * self.spec["power_w"]
+        return LLMResponse(
+            text=f"```python\n{code}```", model=self.name,
+            tokens_in=tokens_in, tokens_out=tokens_out,
+            seconds=seconds, joules=joules,
+        )
+
+
+class OllamaBackend:
+    """Production wiring for real local GGUF models (offline-unavailable)."""
+
+    def __init__(self, model: str, host: str = "http://localhost:11434",
+                 power_w: float = 1000.0):
+        self.name = model
+        self.host = host
+        self.power_w = power_w
+
+    def generate(self, prompt: str, *, meta: dict) -> LLMResponse:
+        import time
+        import urllib.request
+
+        body = json.dumps(
+            {"model": self.name, "prompt": prompt, "stream": False}
+        ).encode()
+        req = urllib.request.Request(
+            f"{self.host}/api/generate", data=body,
+            headers={"Content-Type": "application/json"},
+        )
+        t0 = time.monotonic()
+        with urllib.request.urlopen(req, timeout=600) as resp:  # noqa: S310
+            payload = json.loads(resp.read())
+        dt = time.monotonic() - t0
+        return LLMResponse(
+            text=payload.get("response", ""), model=self.name,
+            tokens_in=payload.get("prompt_eval_count", 0),
+            tokens_out=payload.get("eval_count", 0),
+            seconds=dt, joules=dt * self.power_w,
+        )
+
+
+def response_fingerprint(resp: LLMResponse) -> str:
+    return hashlib.sha256(resp.text.encode()).hexdigest()[:16]

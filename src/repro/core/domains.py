@@ -1,0 +1,232 @@
+"""The six computational domains of the paper (Table I / Fig. 4).
+
+Each Domain knows how to:
+  * enumerate its first N points in canonical order (the ground-truth dataset
+    of Sec. IV — generated *independently* of the analytical maps so the maps
+    can be validated against it),
+  * test membership (vectorized) — the bounding-box baseline's `if`,
+  * report exact sizes, bounding boxes and block-waste accounting.
+
+Canonical orders:
+  dense domains   — row-major nested loops (lambda = rank in loop order),
+  fractal domains — recursive construction, most-significant digit outermost
+                    (identical to ascending base-B digit order of lambda).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.inverse import tet, tri
+
+# ---------------------------------------------------------------------------
+# Fractal digit -> translation-vector tables (Table I, rightmost column)
+# ---------------------------------------------------------------------------
+
+GASKET_VECS = ((0, 0), (1, 0), (0, 1))  # base 3, spatial scale 2
+CARPET_VECS = tuple(
+    (x, y) for x in range(3) for y in range(3) if not (x == 1 and y == 1)
+)  # base 8, spatial scale 3
+SIERP3D_VECS = ((0, 0, 0), (1, 0, 0), (0, 1, 0), (0, 0, 1))  # base 4, scale 2
+MENGER_VECS = tuple(
+    (x, y, z)
+    for x in range(3)
+    for y in range(3)
+    for z in range(3)
+    if (x == 1) + (y == 1) + (z == 1) < 2
+)  # base 20 (27 - 7 voids), spatial scale 3
+MENGER_VOIDS = tuple(
+    (x, y, z)
+    for x in range(3)
+    for y in range(3)
+    for z in range(3)
+    if (x == 1) + (y == 1) + (z == 1) >= 2
+)
+
+assert len(CARPET_VECS) == 8 and len(MENGER_VECS) == 20 and len(MENGER_VOIDS) == 7
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """A computational domain with canonical enumeration + membership."""
+
+    name: str          # internal id
+    paper_name: str    # name used in the paper's tables
+    dim: int
+    kind: str          # "dense" | "fractal"
+    complexity: str    # ground-truth map cost class, e.g. "O(1)", "O(log3 N)"
+    base: int | None = None       # fractal digit base B
+    scale: int | None = None      # fractal spatial scale per level
+    vecs: Sequence[tuple] | None = None  # fractal digit->vector table
+
+    # -- sizes ------------------------------------------------------------
+    def size(self, n: int) -> int:
+        """|domain| for structural parameter n (rows / layers / levels)."""
+        if self.name == "tri2d":
+            return tri(n)
+        if self.name == "pyramid3d":
+            return tet(n)
+        return self.base ** n  # fractal level n
+
+    def level_for_points(self, n_points: int) -> int:
+        """Smallest structural parameter whose domain holds >= n_points."""
+        n = 0
+        while self.size(n) < n_points:
+            n += 1
+        return n
+
+    # -- canonical enumeration (ground truth) ------------------------------
+    def enumerate_points(self, n_points: int) -> np.ndarray:
+        """First n_points coordinates in canonical order, shape (N, dim)."""
+        if self.name == "tri2d":
+            out = np.empty((n_points, 2), dtype=np.int64)
+            i = 0
+            x = 0
+            while i < n_points:
+                for y in range(x + 1):
+                    if i >= n_points:
+                        break
+                    out[i] = (x, y)
+                    i += 1
+                x += 1
+            return out
+        if self.name == "pyramid3d":
+            out = np.empty((n_points, 3), dtype=np.int64)
+            i = 0
+            z = 0
+            while i < n_points:
+                for x in range(z + 1):
+                    for y in range(x + 1):
+                        if i >= n_points:
+                            break
+                        out[i] = (x, y, z)
+                        i += 1
+                    if i >= n_points:
+                        break
+                z += 1
+            return out
+        # fractal: iterative digit construction, vectorized over levels.
+        # point(lam) = sum_i vec(d_i) * scale^i — build by levels to keep the
+        # construction independent from maps.py (no shared code path).
+        level = self.level_for_points(n_points)
+        pts = np.zeros((1, self.dim), dtype=np.int64)
+        vecs = np.asarray(self.vecs, dtype=np.int64)
+        for lev in range(level):
+            # prepend digit at position `lev` as the *least* significant digit
+            # of the next level: new = vec(d) * scale^lev + old  with d slowest?
+            # canonical order: most-significant digit outermost =>
+            # new_points = concat_d [ vec(d)*scale^lev + pts ] where lev grows
+            # and d is the *new most significant* digit.
+            offs = vecs * (self.scale ** lev)
+            pts = (offs[:, None, :] + pts[None, :, :]).reshape(-1, self.dim)
+            if len(pts) >= n_points:
+                break
+        return pts[:n_points]
+
+    # -- membership (the bounding-box `if`) --------------------------------
+    def contains(self, coords: np.ndarray) -> np.ndarray:
+        """Vectorized membership test for (N, dim) int coords."""
+        c = np.asarray(coords, dtype=np.int64)
+        if self.name == "tri2d":
+            return (c[:, 1] >= 0) & (c[:, 1] <= c[:, 0])
+        if self.name == "pyramid3d":
+            return (c[:, 1] >= 0) & (c[:, 1] <= c[:, 0]) & (c[:, 0] <= c[:, 2])
+        if self.name == "gasket2d":
+            return (c[:, 0] & c[:, 1]) == 0
+        if self.name == "sierpinski3d":
+            x, y, z = c[:, 0], c[:, 1], c[:, 2]
+            return ((x & y) | (x & z) | (y & z)) == 0
+        if self.name == "carpet2d":
+            x, y = c[:, 0].copy(), c[:, 1].copy()
+            ok = np.ones(len(c), dtype=bool)
+            while (x > 0).any() or (y > 0).any():
+                ok &= ~((x % 3 == 1) & (y % 3 == 1))
+                x //= 3
+                y //= 3
+            return ok
+        if self.name == "menger3d":
+            x, y, z = c[:, 0].copy(), c[:, 1].copy(), c[:, 2].copy()
+            ok = np.ones(len(c), dtype=bool)
+            while (x > 0).any() or (y > 0).any() or (z > 0).any():
+                ones = (x % 3 == 1).astype(np.int64) + (y % 3 == 1) + (z % 3 == 1)
+                ok &= ones < 2
+                x //= 3
+                y //= 3
+                z //= 3
+            return ok
+        raise ValueError(self.name)
+
+    # -- bounding box accounting (Table VIII/IX baselines) ------------------
+    def bounding_box_extent(self, n_points: int) -> tuple[int, ...]:
+        """Per-axis extent of the minimal axis-aligned box holding the first
+        n_points canonical points."""
+        if self.name == "tri2d":
+            rows = int(np.ceil((np.sqrt(8.0 * n_points + 1) - 1) / 2))
+            return (rows, rows)
+        if self.name == "pyramid3d":
+            z = self.level_for_points(n_points)
+            return (z, z, z)
+        level = self.level_for_points(n_points)
+        ext = self.scale ** level
+        return (ext,) * self.dim
+
+    def block_accounting(self, n_points: int, block: int = 256) -> dict:
+        """Blocks launched by the bounding-box strategy vs the mapped strategy.
+
+        Matches the paper's Tables VIII/IX accounting: the mapped (block-space)
+        kernel launches ceil(N / block) linear blocks; the BB kernel launches a
+        grid over the bounding box with sqrt/cbrt-shaped CUDA blocks
+        (16x16 in 2D, 8x8x4 in 3D -> 256 threads).
+        """
+        valid = -(-n_points // block)
+        ext = self.bounding_box_extent(n_points)
+        if self.dim == 2:
+            bdims = (16, 16)
+        else:
+            bdims = (8, 8, 4)
+        bb = 1
+        for e, b in zip(ext, bdims):
+            bb *= -(-e // b)
+        return {
+            "valid_blocks": valid,
+            "bb_blocks": bb,
+            "wasted_blocks": max(bb - valid, 0),
+            "waste_fraction": max(bb - valid, 0) / bb if bb else 0.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+TRI2D = Domain("tri2d", "2D Triangular", 2, "dense", "O(1)")
+PYRAMID3D = Domain("pyramid3d", "3D Pyramid", 3, "dense", "O(1)")
+GASKET2D = Domain(
+    "gasket2d", "2D Sierpinski Gasket", 2, "fractal", "O(log3 N)",
+    base=3, scale=2, vecs=GASKET_VECS,
+)
+CARPET2D = Domain(
+    "carpet2d", "2D Sierpinski Carpet", 2, "fractal", "O(log8 N)",
+    base=8, scale=3, vecs=CARPET_VECS,
+)
+SIERPINSKI3D = Domain(
+    "sierpinski3d", "3D Sierpinski Pyramid", 3, "fractal", "O(log4 N)",
+    base=4, scale=2, vecs=SIERP3D_VECS,
+)
+MENGER3D = Domain(
+    "menger3d", "3D Menger Sponge", 3, "fractal", "O(log20 N)",
+    base=20, scale=3, vecs=MENGER_VECS,
+)
+
+DOMAINS: dict[str, Domain] = {
+    d.name: d
+    for d in (TRI2D, PYRAMID3D, GASKET2D, CARPET2D, SIERPINSKI3D, MENGER3D)
+}
+
+
+def get_domain(name: str) -> Domain:
+    if name not in DOMAINS:
+        raise KeyError(f"unknown domain {name!r}; have {sorted(DOMAINS)}")
+    return DOMAINS[name]

@@ -1,0 +1,185 @@
+"""Energy & time accounting (Sec. V.B / V.C).
+
+Two ledgers:
+  * inference ledger — one-time joules spent deriving the map (from the
+    backend's LLMResponse),
+  * deployment ledger — per-run block-level time/energy, with three sources:
+      (a) exact block-count accounting (device independent — matches the
+          paper's Total/Wasted columns),
+      (b) an A100 cost model calibrated on the paper's measured Tables
+          VIII/IX entries (per-logic per-block costs),
+      (c) a TPU-v5e roofline projection for the Pallas deployment.
+
+The amortization calculator reproduces the paper's "instantly amortized on
+the very first execution" claim for fractal domains.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import paper_tables as pt
+from repro.core.domains import Domain
+
+# --- A100 cost model, calibrated directly on Table VIII/IX measurements ----
+# per-block kernel time (ns/block) for the *mapped* kernel by logic class,
+# derived as time / total_blocks of the corresponding table entries.
+_NS = 1e6  # ms -> ns over 1.953125e6 blocks  =>  ms * 1e6 / blocks
+_VALID = 1_953_125.0
+
+A100_NS_PER_BLOCK = {
+    "analytical_2d": 1.46 * _NS / _VALID,       # 0.75 ns
+    "sqrt_loop": 1.97 * _NS / _VALID,
+    "approx_if": 1.51 * _NS / _VALID,
+    "binsearch_2d": 14.86 * _NS / _VALID,
+    "analytical_3d": 3.84 * _NS / _VALID,
+    "cbrt_loop": 6.21 * _NS / _VALID,
+    "binsearch_3d": 29.31 * _NS / _VALID,
+    "binsearch_linear": 51.57 * _NS / _VALID,
+    "linear": 117.03 * _NS / _VALID,
+    "bitwise_2d": 8.62 * _NS / _VALID,
+    "bitwise_3d": 3.30 * _NS / _VALID,
+    # bounding-box kernels: cost per *launched* block (waste included),
+    # calibrated per domain class from the baseline rows.
+    "bb_tri2d": 747.45 * _NS / 3_912_484.0,
+    "bb_pyramid3d": 2530.65 * _NS / 12_008_989.0,
+    "bb_gasket2d": 65.78 * _NS / 88_736_400.0,
+    "bb_sierpinski3d": 15_949.00 * _NS / 8_000_000_000.0,
+}
+
+# gross energy per block (J/block), calibrated on the same table rows —
+# gross draw folds in the idle baseline, so per-logic anchors beat a single
+# power constant.
+A100_J_PER_BLOCK = {
+    "analytical_2d": 0.44 / _VALID,
+    "sqrt_loop": 0.70 / _VALID,
+    "approx_if": 0.51 / _VALID,
+    "binsearch_2d": 3.21 / _VALID,
+    "analytical_3d": 0.92 / _VALID,
+    "cbrt_loop": 1.44 / _VALID,
+    "binsearch_3d": 5.99 / _VALID,
+    "binsearch_linear": 9.12 / _VALID,
+    "linear": 22.25 / _VALID,
+    "bitwise_2d": 1.39 / _VALID,
+    "bitwise_3d": 0.55 / _VALID,
+    "bb_tri2d": 83.27 / 3_912_484.0,
+    "bb_pyramid3d": 282.67 / 12_008_989.0,
+    "bb_gasket2d": 6.73 / 88_736_400.0,
+    "bb_sierpinski3d": 1591.71 / 8_000_000_000.0,
+}
+
+# average gross power (W) during kernel execution (fallback when a logic
+# class has no direct energy anchor).
+A100_POWER_W = {"mapped": 295.0, "bounding_box": 108.0}
+
+# TPU v5e single-chip peaks (given hardware constants of the assignment)
+TPU_PEAK_FLOPS = 197e12       # bf16 FLOP/s
+TPU_HBM_BW = 819e9            # B/s
+TPU_ICI_BW = 50e9             # B/s per link
+TPU_POWER_W = 170.0           # chip TDP-class estimate for energy projection
+
+
+def _logic_key(logic: str, domain: Domain) -> str:
+    if logic in ("analytical",):
+        return "analytical_2d" if domain.dim == 2 else "analytical_3d"
+    if logic in ("binsearch",):
+        return "binsearch_2d" if domain.dim == 2 else "binsearch_3d"
+    if logic in ("bitwise", "permuted"):
+        return "bitwise_2d" if domain.dim == 2 else "bitwise_3d"
+    return logic
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentEstimate:
+    strategy: str            # "mapped" | "bounding_box"
+    logic: str
+    n_points: int
+    total_blocks: int
+    wasted_blocks: int
+    time_ms: float
+    energy_j: float
+
+    @property
+    def waste_fraction(self) -> float:
+        return self.wasted_blocks / self.total_blocks if self.total_blocks else 0.0
+
+
+def estimate_mapped(domain: Domain, logic: str, n_points: int,
+                    block: int = 256) -> DeploymentEstimate:
+    blocks = -(-n_points // block)
+    key = _logic_key(logic, domain)
+    ns = A100_NS_PER_BLOCK[key] * blocks
+    t_ms = ns / 1e6
+    if key in A100_J_PER_BLOCK:
+        energy = A100_J_PER_BLOCK[key] * blocks
+    else:
+        energy = t_ms / 1e3 * A100_POWER_W["mapped"]
+    return DeploymentEstimate(
+        strategy="mapped", logic=logic, n_points=n_points,
+        total_blocks=blocks, wasted_blocks=0,
+        time_ms=t_ms, energy_j=energy,
+    )
+
+
+def estimate_bounding_box(domain: Domain, n_points: int,
+                          block: int = 256) -> DeploymentEstimate:
+    acc = domain.block_accounting(n_points, block)
+    key = f"bb_{domain.name}"
+    # calibration exists for the 4 domains the paper measured; others fall
+    # back to the same-dimensionality dense calibration.
+    if key not in A100_NS_PER_BLOCK:
+        key = "bb_tri2d" if domain.dim == 2 else "bb_pyramid3d"
+    ns = A100_NS_PER_BLOCK[key] * acc["bb_blocks"]
+    t_ms = ns / 1e6
+    energy = A100_J_PER_BLOCK.get(key, 0.0) * acc["bb_blocks"] \
+        if key in A100_J_PER_BLOCK else t_ms / 1e3 * A100_POWER_W["bounding_box"]
+    return DeploymentEstimate(
+        strategy="bounding_box", logic="if_O1", n_points=n_points,
+        total_blocks=acc["bb_blocks"], wasted_blocks=acc["wasted_blocks"],
+        time_ms=t_ms, energy_j=energy,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Amortization:
+    inference_j: float
+    bb_energy_j: float
+    mapped_energy_j: float
+    savings_per_run_j: float
+    runs_to_break_even: float
+    speedup: float
+    energy_reduction: float
+
+
+def amortization(domain: Domain, logic: str, inference_j: float,
+                 n_points: int = 500_000_000) -> Amortization:
+    """The paper's upfront-cost-vs-permanent-savings calculus (Sec. III.B)."""
+    bb = estimate_bounding_box(domain, n_points)
+    mp = estimate_mapped(domain, logic, n_points)
+    savings = bb.energy_j - mp.energy_j
+    return Amortization(
+        inference_j=inference_j,
+        bb_energy_j=bb.energy_j,
+        mapped_energy_j=mp.energy_j,
+        savings_per_run_j=savings,
+        runs_to_break_even=(inference_j / savings) if savings > 0 else float("inf"),
+        speedup=bb.time_ms / mp.time_ms if mp.time_ms > 0 else float("inf"),
+        energy_reduction=bb.energy_j / mp.energy_j if mp.energy_j > 0 else float("inf"),
+    )
+
+
+def tpu_block_projection(flops_per_block: float, bytes_per_block: float,
+                         n_blocks: int) -> dict:
+    """Roofline time/energy of a block workload on one TPU v5e chip."""
+    t_compute = flops_per_block * n_blocks / TPU_PEAK_FLOPS
+    t_memory = bytes_per_block * n_blocks / TPU_HBM_BW
+    t = max(t_compute, t_memory)
+    return {
+        "time_s": t,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "energy_j": t * TPU_POWER_W,
+    }
+
+
+def points_per_joule(valid_points: int, joules: float) -> float:
+    """Fig. 5 efficiency metric: correctly mapped points per joule."""
+    return valid_points / joules if joules > 0 else 0.0

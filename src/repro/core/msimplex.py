@@ -1,0 +1,104 @@
+"""Generalized m-simplex block-space maps (paper refs [5], [8]; future-work
+direction "more heterogeneous HPC topologies").
+
+The m-simplex domain is {(x_1..x_m) : 0 <= x_1 <= x_2 <= ... <= x_m}; its
+size at side n is the binomial C(n+m-1, m) (m=2: triangular numbers, m=3:
+tetrahedral — paper Table I rows 1-2 are the m=2,3 specializations).
+
+The linear map peels one coordinate per level: the largest x_m with
+simplex_size(x_m, m) <= lambda, recursing on the remainder with m-1 — each
+level inverted by a float seed (the paper's sqrt/cbrt generalizes to the
+m-th root) plus an exact integer correction.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def simplex_size(n: int, m: int) -> int:
+    """|m-simplex| with side n: C(n+m-1, m)."""
+    return math.comb(n + m - 1, m)
+
+
+def simplex_layer(lam: int, m: int) -> int:
+    """Largest x with simplex_size(x, m) <= lam.
+
+    Float seed x ~ (m! * lam)^(1/m) (the generalized sqrt/cbrt of Table I),
+    then an exact ladder — the paper's analytical O(1) structure for any m.
+    """
+    if lam < 0:
+        raise ValueError("negative lambda")
+    if m == 1:
+        return lam
+    x = int(round((math.factorial(m) * lam) ** (1.0 / m)))
+    while simplex_size(x + 1, m) <= lam:
+        x += 1
+    while x > 0 and simplex_size(x, m) > lam:
+        x -= 1
+    return x
+
+
+def map_msimplex(lam: int, m: int) -> tuple[int, ...]:
+    """lambda -> (x_1 <= x_2 <= ... <= x_m), the canonical enumeration."""
+    coords = []
+    for level in range(m, 0, -1):
+        x = simplex_layer(lam, level)
+        coords.append(x)
+        lam -= simplex_size(x, level)
+    return tuple(reversed(coords))
+
+
+def unmap_msimplex(coords: tuple[int, ...]) -> int:
+    """(x_1 <= ... <= x_m) -> lambda (rank in canonical order)."""
+    lam = 0
+    for level, x in enumerate(reversed(coords), start=0):
+        lam += simplex_size(x, len(coords) - level)
+    return lam
+
+
+def enumerate_msimplex(n_points: int, m: int) -> np.ndarray:
+    """First n_points of the canonical enumeration, (N, m) — independent
+    nested-loop construction for validating the map."""
+    out = np.empty((n_points, m), dtype=np.int64)
+
+    def gen(m_left, bound):
+        """Yield tuples (x_1 <= ... <= x_{m_left}) with x_{m_left} <= bound,
+        outermost coordinate slowest (canonical order)."""
+        if m_left == 0:
+            yield ()
+            return
+        for x in range(bound + 1):
+            for rest in gen(m_left - 1, x):
+                yield rest + (x,)
+
+    idx = 0
+    x_outer = 0
+    while idx < n_points:
+        for rest in gen(m - 1, x_outer):
+            if idx >= n_points:
+                break
+            out[idx] = rest + (x_outer,)
+            idx += 1
+        x_outer += 1
+    return out
+
+
+def block_accounting_msimplex(n_points: int, m: int, block: int = 256) -> dict:
+    """BB waste for the m-simplex: the box is n^m vs C(n+m-1, m) ~ n^m/m!.
+
+    The waste fraction approaches 1 - 1/m! — the paper's 2D ~50% and 3D ~83%
+    generalize to 96% (m=4), 99.2% (m=5): the mapped kernel's advantage
+    GROWS with dimension.
+    """
+    n = 0
+    while simplex_size(n, m) < n_points:
+        n += 1
+    valid = -(-n_points // block)
+    bb = -(-(n ** m) // block)
+    return {
+        "side": n, "valid_blocks": valid, "bb_blocks": bb,
+        "waste_fraction": (bb - valid) / bb if bb else 0.0,
+        "asymptotic_waste": 1.0 - 1.0 / math.factorial(m),
+    }

@@ -1,0 +1,4 @@
+from repro.kernels.domain_map.ops import (  # noqa: F401
+    bb_membership, block_counts, map_coordinates,
+)
+from repro.kernels.domain_map.ref import bb_membership_ref, map_coordinates_ref  # noqa: F401

@@ -1,0 +1,25 @@
+"""Pure-jnp/numpy oracles for the domain-map kernels."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.domains import get_domain
+from repro.core.maps import np_map
+
+
+def map_coordinates_ref(domain_name: str, n_points: int) -> np.ndarray:
+    """(N, dim) coordinates of the first N domain points (mapped strategy)."""
+    return np_map(domain_name, np.arange(n_points, dtype=np.int64))
+
+
+def bb_membership_ref(domain_name: str, extent: tuple[int, ...]) -> np.ndarray:
+    """Row-major membership mask over the bounding box (BB strategy)."""
+    d = get_domain(domain_name)
+    lam = np.arange(int(np.prod(extent)), dtype=np.int64)
+    if d.dim == 2:
+        w = extent[1]
+        coords = np.stack([lam // w, lam % w], axis=-1)
+    else:
+        h, w = extent[1], extent[2]
+        coords = np.stack([lam // (h * w), (lam // w) % h, lam % w], axis=-1)
+    return d.contains(coords).astype(np.int32)

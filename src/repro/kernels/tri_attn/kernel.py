@@ -1,0 +1,168 @@
+"""Causal flash attention with block-space thread mapping (the paper's
+technique as a Pallas TPU kernel).
+
+The (q_block i, k_block j) iteration space of causal attention is exactly the
+paper's 2D lower-triangular domain.  Two grid strategies:
+
+  * ``bounding_box`` — square grid (bh, nb, nb) with the invalid upper
+    triangle discarded by ``pl.when(j <= i)``: the classic BB baseline of
+    Fig. 1.  On TPU the grid is iterated *sequentially* per core, so the
+    discarded nb(nb-1)/2 steps still pay grid-step + DMA-schedule overhead —
+    the TPU equivalent of wasted CUDA blocks.
+  * ``mapped`` — linear grid (bh, T(nb)) with T(nb) = nb(nb+1)/2 and the
+    paper's Table-I inverse-triangular map evaluated *inside the BlockSpec
+    index_map*:   i = (isqrt(8λ+1)-1)/2,  j = λ - i(i+1)/2.
+    Zero wasted steps; ascending λ enumerates j = 0..i for each i, which is
+    precisely the k-inner iteration order online softmax needs.
+
+VMEM tiling: (block_q, head_dim) q tile, (block_k, head_dim) k/v tiles,
+fp32 accumulators in VMEM scratch that persist across the sequential k steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _isqrt_fp32(v):
+    """Exact integer sqrt for traced int32 scalars (index_map safe).
+
+    float32 sqrt is 1-ulp accurate; the correction ladder restores exactness.
+    lambda < T(nb) keeps 8λ+1 < 2^26 for nb <= 4096, where 1 correction step
+    suffices — we apply two for margin.
+    """
+    r = jnp.sqrt(v.astype(jnp.float32)).astype(jnp.int32)
+    for _ in range(2):
+        r = jnp.where((r + 1) * (r + 1) <= v, r + 1, r)
+        r = jnp.where(r * r > v, r - 1, r)
+    return r
+
+
+def lam_to_ij(lam):
+    """The paper's 2D triangular map g(λ) = (i, j) on traced int scalars."""
+    i = (_isqrt_fp32(8 * lam + 1) - 1) // 2
+    j = lam - i * (i + 1) // 2
+    return i, j
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,          # (1, bq, d) / (1, bk, d) VMEM tiles
+    o_ref,                        # (1, bq, d) VMEM tile
+    m_scr, l_scr, acc_scr,        # fp32 scratch carried across k steps
+    *, scale: float, block_q: int, block_k: int, grid_mode: str,
+):
+    if grid_mode == "mapped":
+        lam = pl.program_id(1)
+        i, j = lam_to_ij(lam)
+    else:
+        i = pl.program_id(1)
+        j = pl.program_id(2)
+
+    def body():
+        @pl.when(j == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(                            # (bq, bk)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # diagonal blocks need the intra-block causal mask
+        q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                     # rescale old state
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+        @pl.when(j == i)  # last valid k block for this q row — finalize
+        def _finalize():
+            o_ref[0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+    if grid_mode == "bounding_box":
+        pl.when(j <= i)(body)   # the paper's BB `if` discard
+    else:
+        body()
+
+
+def tri_grid_size(nb: int) -> int:
+    return nb * (nb + 1) // 2
+
+
+def build_attention_call(
+    batch_heads: int, seq: int, head_dim: int, *,
+    block_q: int, block_k: int, grid_mode: str, dtype,
+    interpret: bool = False,
+):
+    """Construct the pallas_call over a fused (batch*heads, seq, d) tensor."""
+    assert seq % block_q == 0 and seq % block_k == 0
+    assert block_q == block_k, "triangular block space needs square blocks"
+    nb = seq // block_q
+    scale = head_dim ** -0.5
+
+    if grid_mode == "mapped":
+        grid = (batch_heads, tri_grid_size(nb))
+
+        def q_map(bh, lam):
+            return (bh, lam_to_ij(lam)[0], 0)
+
+        def kv_map(bh, lam):
+            return (bh, lam_to_ij(lam)[1], 0)
+
+        o_map = q_map
+    elif grid_mode == "bounding_box":
+        grid = (batch_heads, nb, nb)
+
+        def q_map(bh, i, j):
+            return (bh, i, 0)
+
+        def kv_map(bh, i, j):
+            # clamp the wasted upper-triangle steps onto a valid tile so the
+            # discarded iterations don't fetch out-of-range blocks
+            return (bh, jnp.minimum(j, i), 0)
+
+        o_map = q_map
+    else:
+        raise ValueError(f"grid_mode {grid_mode!r}")
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        grid_mode=grid_mode,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), q_map),
+            pl.BlockSpec((1, block_k, head_dim), kv_map),
+            pl.BlockSpec((1, block_k, head_dim), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), o_map),
+        out_shape=jax.ShapeDtypeStruct((batch_heads, seq, head_dim), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, head_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )

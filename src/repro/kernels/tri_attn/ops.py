@@ -1,0 +1,69 @@
+"""Jit'd public wrapper for the triangular-domain attention kernel.
+
+`causal_attention(q, k, v)` accepts (batch, heads, seq, head_dim), handles
+GQA by repeating kv heads, runs the Pallas forward, and differentiates via
+the jnp oracle (custom_vjp) so the kernel is usable inside training graphs.
+On CPU hosts `interpret=True` executes the kernel body in Python — the
+correctness path used by tests; on TPU the same call compiles natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tri_attn.kernel import build_attention_call, tri_grid_size  # noqa: F401
+from repro.kernels.tri_attn.ref import causal_attention_ref
+
+
+def _forward(q, k, v, *, block_q, block_k, grid_mode, interpret):
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    if hk != h:  # GQA: repeat kv heads up to q heads
+        assert h % hk == 0
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    call = build_attention_call(
+        b * h, s, d, block_q=block_q, block_k=block_k,
+        grid_mode=grid_mode, dtype=q.dtype, interpret=interpret,
+    )
+    out = call(
+        q.reshape(b * h, s, d), k.reshape(b * h, s, d), v.reshape(b * h, s, d)
+    )
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def causal_attention(q, k, v, block_q=128, block_k=128, grid_mode="mapped",
+                     interpret=False):
+    """Causal attention over the lower-triangular block domain.
+
+    grid_mode: "mapped" (linear λ grid, paper technique) or "bounding_box"
+    (square grid + discard, paper baseline).
+    """
+    return _forward(q, k, v, block_q=block_q, block_k=block_k,
+                    grid_mode=grid_mode, interpret=interpret)
+
+
+def _fwd(q, k, v, block_q, block_k, grid_mode, interpret):
+    out = _forward(q, k, v, block_q=block_q, block_k=block_k,
+                   grid_mode=grid_mode, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(block_q, block_k, grid_mode, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: causal_attention_ref(q_, k_, v_), q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_fwd, _bwd)
+
+
+def grid_steps(seq: int, block: int, grid_mode: str) -> int:
+    """Sequential grid steps per (batch*head) — the waste accounting."""
+    nb = seq // block
+    return tri_grid_size(nb) if grid_mode == "mapped" else nb * nb

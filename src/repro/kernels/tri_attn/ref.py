@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for causal (lower-triangular domain) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float | None = None
+) -> jnp.ndarray:
+    """Reference causal attention.
+
+    q, k, v: (batch, heads, seq, head_dim); returns same shape as q.
+    Computation in float32 regardless of input dtype (kernel does the same).
+    """
+    *_, seq, head_dim = q.shape
+    if scale is None:
+        scale = head_dim ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.wkv.ops import wkv_chunked  # noqa: F401
+from repro.kernels.wkv.ref import wkv_ref  # noqa: F401

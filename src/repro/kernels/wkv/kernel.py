@@ -1,0 +1,97 @@
+"""Chunked WKV Pallas kernel (RWKV6 time-mix hot spot).
+
+Grid: (batch*heads, n_chunks) — sequential chunk steps per core with the
+(D, D) state carried in fp32 VMEM scratch.  Per step, the chunkwise-parallel
+form of the recurrence (see models/rwkv6.py):
+
+    A_t   = cumprod(w) within the chunk         (per key dim)
+    o     = tril_strict(r̃ k̃^T) V + diag((u⊙r)·k) V + r̃ S_in
+    S_out = A_C ⊙ (S_in + k̃^T V)
+with r̃ = r ⊙ A_{t-1}, k̃ = k / A_t — the strictly-lower-triangular intra
+matmul is the paper's 2D block domain at chunk granularity.
+
+VMEM per step: 4 (C, D) input tiles + (C, C) pair matrix + (D, D) state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, s0_ref,
+                o_ref, s_out_ref, s_scr, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    r = r_ref[0].astype(jnp.float32)          # (C, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    logw = logw_ref[0].astype(jnp.float32)    # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)          # (1, D) bonus
+
+    clog = jnp.cumsum(logw, axis=0)           # (C, D)
+    a_prev = jnp.exp(clog - logw)             # A_{t-1} = A_t / w_t
+    a_end = jnp.exp(clog[-1:])                # (1, D)
+
+    r_t = r * a_prev
+    k_t = k * jnp.exp(-clog)
+
+    pmat = jax.lax.dot_general(               # (C, C)
+        r_t, k_t, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, pmat.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, pmat.shape, 1)
+    pmat = jnp.where(rows > cols, pmat, 0.0)  # strictly lower
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)   # (C, 1)
+
+    s_in = s_scr[...]                          # (D, D)
+    o = (jax.lax.dot_general(pmat, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + diag * v
+         + jax.lax.dot_general(r_t, s_in, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32))
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    kv = jax.lax.dot_general(k_t, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (D, D)
+    s_scr[...] = a_end.T * (s_in + kv)
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _final():
+        s_out_ref[0] = s_scr[...]
+
+
+def build_wkv_call(bh: int, seq: int, d: int, *, chunk: int, dtype,
+                   interpret: bool = False):
+    assert seq % chunk == 0
+    nc = seq // chunk
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),   # r
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),   # k
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),   # v
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),   # logw
+            pl.BlockSpec((1, 1, d), lambda b, c: (b, 0, 0)),       # u
+            pl.BlockSpec((1, d, d), lambda b, c: (b, 0, 0)),       # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),   # o
+            pl.BlockSpec((1, d, d), lambda b, c: (b, 0, 0)),       # s_out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), dtype),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the chunked WKV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import build_wkv_call
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: (BH, S, D); u: (BH, D); state: (BH, D, D) fp32.
+
+    w is the decay in (0, 1); the kernel consumes log(w).
+    Returns (o: (BH, S, D) in r.dtype, final state fp32).
+    """
+    bh, s, d = r.shape
+    call = build_wkv_call(bh, s, d, chunk=chunk, dtype=r.dtype,
+                          interpret=interpret)
+    logw = jnp.log(w.astype(jnp.float32))
+    o, s_out = call(r, k, v, logw, u[:, None, :].astype(jnp.float32),
+                    state.astype(jnp.float32))
+    return o, s_out

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the WKV recurrence (RWKV6 core).
+
+    o_t = r_t^T S_{t-1} + (u ⊙ r_t)·k_t v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """r,k,v,w: (BH, S, D) fp32; u: (BH, D); state: (BH, D, D).
+
+    Returns (o: (BH, S, D), final state).
+    """
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (BH, D)
+        o_t = jnp.einsum("bk,bkv->bv", r_t, S) + \
+            jnp.einsum("bk,bk,bv->bv", r_t * u, k_t, v_t)
+        S = w_t[..., None] * S + k_t[..., None] * v_t[:, None, :]
+        return S, o_t
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    state_f, o = jax.lax.scan(step, state, xs)
+    return o.swapaxes(0, 1), state_f

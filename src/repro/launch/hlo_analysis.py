@@ -1,0 +1,280 @@
+"""Post-SPMD HLO text analysis with while-loop trip-count multiplication.
+
+XLA's cost_analysis visits each instruction ONCE — a scan-over-layers body is
+counted a single time, under-reporting FLOPs/collectives by ~n_layers.  This
+parser rebuilds per-computation costs from the compiled (per-device!) HLO
+text and multiplies every while body by its trip count (recovered from the
+loop condition's comparison constant).
+
+Extracted per cell:
+  * flops          — dot/convolution FLOPs (2*M*N*K), trip-count scaled
+  * hbm_bytes      — post-fusion buffer traffic: sum over non-trivial
+                     instructions of (operand + result bytes); fusions count
+                     only their boundary buffers (inner ops live in registers/
+                     VMEM), which is exactly the fusion model of HBM traffic
+  * collectives    — bytes/count per collective type, trip-count scaled
+                     (an FSDP all-gather inside the layer scan costs L times)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_TOKEN = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|f8e4m3|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .+ \{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (.*?)$")
+# first lowercase word directly followed by '(' = the op name (the result
+# type precedes it and may be a tuple with /*index=N*/ comments)
+_OPNAME = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_CALLED = re.compile(r"(?:to_apply|condition|body|branch_computations|called_computations|calls)=\{?%?([\w\.\-]+(?:, ?%?[\w\.\-]+)*)\}?")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    """(elements, bytes) summed over all typed shape tokens in `text`."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_text: str        # result shape part
+    rest: str               # everything after the op name
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict            # instr name -> result shape text
+
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "copy-start", "copy-done", "partition-id",
+}
+
+
+def parse_computations(hlo: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name: str | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HEADER.match(line)
+        if m and line.endswith("{"):
+            cur = Computation(m.group(1), [], {})
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        mo = _OPNAME.search(rhs)
+        if not mo:
+            continue
+        result_text, op = rhs[: mo.start()], mo.group(1)
+        cur.shapes[name] = result_text
+        cur.instrs.append(Instr(name, op, result_text, rhs[mo.start():]))
+    return comps, entry_name
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the loop condition.
+
+    Post-optimization the `compare(iter, constant(N))` is often wrapped in a
+    fusion; loop conditions are tiny, so the max positive integer constant in
+    the condition computation is the bound.
+    """
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, shapes: dict) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    res_elems, _ = _shape_elems_bytes(ins.result_text)
+    ops = re.search(r"\(([^)]*)\)", ins.rest)
+    lhs_name = None
+    if ops:
+        parts = [p.strip().lstrip("%") for p in ops.group(1).split(",")]
+        if parts:
+            lhs_name = parts[0].split(" ")[-1].lstrip("%")
+    k = 1
+    mc = _CONTRACT.search(ins.rest)
+    if mc and lhs_name and lhs_name in shapes:
+        dims_txt = _SHAPE_TOKEN.search(shapes[lhs_name])
+        if dims_txt:
+            lhs_dims = [int(d) for d in dims_txt.group(2).split(",") if d]
+            for ci in mc.group(1).split(","):
+                if ci:
+                    idx = int(ci)
+                    if idx < len(lhs_dims):
+                        k *= lhs_dims[idx]
+    return 2.0 * res_elems * k
+
+
+def _operand_bytes(ins: Instr, shapes: dict) -> int:
+    total = 0
+    ops = re.search(r"\(([^)]*)\)", ins.rest)
+    if not ops:
+        return 0
+    for part in ops.group(1).split(","):
+        name = part.strip().lstrip("%").split(" ")[-1].lstrip("%")
+        if name in shapes:
+            _, b = _shape_elems_bytes(shapes[name])
+            total += b
+    return total
+
+
+def analyze(hlo: str, entry: str | None = None) -> dict:
+    comps, entry_name = parse_computations(hlo)
+    if entry is None:
+        entry = entry_name
+    if entry is None:
+        # fallback: a computation never referenced as a callee
+        called = set()
+        for c in comps.values():
+            for ins in c.instrs:
+                for m in re.finditer(
+                        r"(?:to_apply|condition|body|branch_computations|"
+                        r"called_computations|calls)=\{?%?([\w\.\-]+"
+                        r"(?:, ?%?[\w\.\-]+)*)\}?", ins.rest):
+                    for nm in re.split(r",\s*", m.group(1)):
+                        called.add(nm.lstrip("%"))
+        candidates = [n for n in comps if n not in called]
+        entry = candidates[0] if candidates else next(iter(comps))
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {op: {"count": 0.0, "bytes": 0.0} for op in COLLECTIVE_OPS}
+    per_op_flops: dict[str, float] = defaultdict(float)
+
+    seen: set[tuple[str, float]] = set()
+
+    def visit(comp_name: str, mult: float):
+        nonlocal flops, hbm_bytes
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            base_op = ins.op.replace("-start", "")
+            if base_op in ("dot", "convolution"):
+                f = _dot_flops(ins, comp.shapes) * mult
+                flops += f
+                per_op_flops[base_op] += f
+            if base_op in COLLECTIVE_OPS:
+                _, rb = _shape_elems_bytes(ins.result_text)
+                coll[base_op]["count"] += mult
+                coll[base_op]["bytes"] += rb * mult
+            if ins.op in ("while", "conditional"):
+                pass  # loop/branch I/O aliases carries; bodies count below
+            elif ins.op == "dynamic-slice":
+                # reads only the sliced window, not the full source buffer
+                _, rb = _shape_elems_bytes(ins.result_text)
+                hbm_bytes += rb * mult
+            elif ins.op == "dynamic-update-slice":
+                # in-place: reads + writes only the update window (operand 1)
+                ops_m = re.search(r"\(([^)]*)\)", ins.rest)
+                ub = 0
+                if ops_m:
+                    parts = [p.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                             for p in ops_m.group(1).split(",")]
+                    if len(parts) > 1 and parts[1] in comp.shapes:
+                        _, ub = _shape_elems_bytes(comp.shapes[parts[1]])
+                hbm_bytes += 2 * ub * mult
+            elif ins.op not in _SKIP_OPS:
+                _, rb = _shape_elems_bytes(ins.result_text)
+                hbm_bytes += (rb + _operand_bytes(ins, comp.shapes)) * mult
+            if ins.op == "while":
+                m = _CALLED.search(ins.rest)
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                if mb and mc:
+                    body, cond = mb.group(1), mc.group(1)
+                    tc = _trip_count(comps[cond]) if cond in comps else 1
+                    visit(body, mult * max(tc, 1))
+                    visit(cond, mult * max(tc, 1))
+            elif ins.op in ("fusion", "call", "custom-call", "map", "reduce",
+                            "reduce-window", "scatter", "sort", "conditional",
+                            "select-and-scatter", "all-reduce", "reduce-scatter"):
+                # fused/called computations: FLOPs of inner dots still count
+                # (e.g. a dot fused with bias); buffer traffic does not.
+                m = _CALLED.search(ins.rest)
+                if m:
+                    for nm in re.split(r",\s*", m.group(1)):
+                        nm = nm.lstrip("%")
+                        visit_flops_only(nm, mult)
+
+    def visit_flops_only(comp_name: str, mult: float):
+        nonlocal flops
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                f = _dot_flops(ins, comp.shapes) * mult
+                flops += f
+                per_op_flops[ins.op] += f
+            m = _CALLED.search(ins.rest)
+            if m and ins.op in ("fusion", "call", "while", "conditional", "map"):
+                tc = 1
+                if ins.op == "while":
+                    mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                    if mc and mc.group(1) in comps:
+                        tc = _trip_count(comps[mc.group(1)])
+                for nm in re.split(r",\s*", m.group(1)):
+                    visit_flops_only(nm.lstrip("%"), mult * max(tc, 1))
+
+    visit(entry, 1.0)
+    coll_total_bytes = sum(v["bytes"] for v in coll.values())
+    coll_total_count = sum(v["count"] for v in coll.values())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "per_op_flops": dict(per_op_flops),
+        "collectives": {
+            **{k: v for k, v in coll.items()},
+            "total_bytes": coll_total_bytes,
+            "total_count": coll_total_count,
+        },
+        "entry": entry,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,57 @@
+"""Serving launcher — batched prefill + decode demo.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+        --batch 4 --prompt-len 32 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.models.common import count_params
+from repro.serving.engine import generate
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--max-new", type=int, default=32)
+    p.add_argument("--temperature", type=float, default=0.0)
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(max_seq=args.prompt_len + args.max_new)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    print(f"arch={cfg.arch_id} params={count_params(params):,}")
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = jax.random.normal(
+            key, (args.batch, cfg.vision_seq, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        extra = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model)) * 0.1
+
+    t0 = time.time()
+    res = generate(params, cfg, prompts, args.max_new, extra=extra,
+                   temperature=args.temperature)
+    dt = time.time() - t0
+    total_new = res.steps * args.batch
+    print(f"generated {res.steps} steps x {args.batch} seqs in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s incl. compile)")
+    print("sample:", res.tokens[0, args.prompt_len:args.prompt_len + 16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD) block — scalar-per-head decay state space, chunked.
+
+    h_t = a_t h_{t-1} + dt_t · x_t ⊗ B_t        a_t = exp(dt_t · A_h) ∈ (0,1)
+    y_t = C_t · h_t + D_h x_t
+
+Chunkwise-parallel evaluation (production path) + lax.scan oracle.  The
+intra-chunk term is again a lower-triangular (t, s) block domain — inclusive
+diagonal this time.  Decode is O(1)/token on the (H, P, N) state plus a
+width-(W-1) conv tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import EMBED, FFN, HEADS, dense_init, rms_norm
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.ssm_state
+    h = cfg.mamba_heads
+    w = cfg.mamba_conv_width
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_dim), jnp.float32)
+                   * (1.0 / w)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def mamba2_specs(cfg):
+    return {
+        "in_proj": (EMBED, FFN),
+        "conv_w": ("conv", FFN), "conv_b": (FFN,),
+        "a_log": (HEADS,), "dt_bias": (HEADS,), "d_skip": (HEADS,),
+        "norm": (FFN,),
+        "out_proj": (FFN, EMBED),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.mamba_d_inner, cfg.ssm_state, cfg.mamba_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, tail=None):
+    """Depthwise causal conv along seq; tail: (B, W-1, C) from previous call."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)
+    out = sum(
+        xp[:, i: i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1):, :] if width > 1 else tail
+    return jax.nn.silu(out + b), new_tail
+
+
+def _ssm_inputs(p, cfg, xbc_act, dt_raw):
+    di, n, h = cfg.mamba_d_inner, cfg.ssm_state, cfg.mamba_heads
+    ph = di // h
+    xh = xbc_act[..., :di]
+    bmat = xbc_act[..., di:di + n].astype(jnp.float32)
+    cmat = xbc_act[..., di + n:].astype(jnp.float32)
+    bsz, s = xh.shape[:2]
+    xh = xh.reshape(bsz, s, h, ph).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                      # negative per-head A
+    loga = dt * a[None, None, :]                  # log decay (B,S,H) < 0
+    return xh, bmat, cmat, dt, loga
+
+
+def mamba2_core_chunked(p, cfg, xbc_act, dt_raw, state, chunk: int = 64):
+    """Chunked SSD. state: (B, H, P, N) fp32. Returns (y, new_state)."""
+    xh, bmat, cmat, dt, loga = _ssm_inputs(p, cfg, xbc_act, dt_raw)
+    bsz, s, h, ph = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0
+
+    def ck(t, last):
+        return t.reshape((bsz, nc, chunk) + last).transpose(
+            (1, 0) + tuple(range(2, t.ndim + 1)))
+
+    xc = xh.reshape(bsz, nc, chunk, h, ph).transpose(1, 0, 3, 2, 4)   # nc,B,h,C,P
+    bc = bmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)        # nc,B,C,N
+    cc = cmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)         # nc,B,h,C
+    lac = loga.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)       # nc,B,h,C
+
+    ca = jnp.cumsum(lac, axis=-1)                  # (nc,B,h,C)
+    a_end = jnp.exp(ca[..., -1:])                  # (nc,B,h,1)
+
+    # intra-chunk: P[t,s] = exp(ca_t - ca_s) (C_t·B_s) dt_s, s <= t
+    rel = ca[..., :, None] - ca[..., None, :]      # (nc,B,h,C,C)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: upper-triangle rel > 0 overflows to inf, and inf*0
+    # in the backward of where() poisons gradients with NaN.
+    gamma = jnp.exp(jnp.where(tril, rel, -1e30))
+    cb = jnp.einsum("nbtN,nbsN->nbts", cc, bc)     # (nc,B,C,C)
+    pm = gamma * cb[:, :, None, :, :] * dtc[..., None, :]
+    y_intra = jnp.einsum("nbhts,nbhsp->nbhtp", pm, xc)
+
+    # cross-chunk state scan
+    # contribution into state: sum_s exp(ca_C - ca_s) dt_s x_s B_s^T
+    w_in = jnp.exp(ca[..., -1:] - ca) * dtc        # (nc,B,h,C)
+    dstate = jnp.einsum("nbhc,nbhcp,nbcN->nbhpN", w_in, xc, bc)
+
+    def step(hst, inp):
+        a_e, dst, c_t, ca_t = inp
+        # y_cross_t = exp(ca_t) C_t · h_in
+        y_cross = jnp.einsum("bhc,bhpN,bcN->bhcp", jnp.exp(ca_t), hst, c_t)
+        h_new = a_e[..., None] * hst + dst
+        return h_new, y_cross
+
+    state_f, y_cross = jax.lax.scan(
+        step, state.astype(jnp.float32), (a_end, dstate, cc, ca))
+    y = y_intra + y_cross                          # (nc,B,h,C,P)
+    y = y.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, ph)
+    y = y + p["d_skip"][None, None, :, None] * xh  # skip connection
+    return y, state_f
+
+
+def mamba2_core_scan(p, cfg, xbc_act, dt_raw, state):
+    """Oracle: step-by-step recurrence."""
+    xh, bmat, cmat, dt, loga = _ssm_inputs(p, cfg, xbc_act, dt_raw)
+    bsz, s, h, ph = xh.shape
+
+    def step(hst, inp):
+        x_t, b_t, c_t, dt_t, la_t = inp
+        hst = jnp.exp(la_t)[..., None, None] * hst + \
+            dt_t[..., None, None] * x_t[..., :, None] * b_t[:, None, None, :]
+        y_t = jnp.einsum("bhpN,bN->bhp", hst, c_t)
+        return hst, y_t
+
+    xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          loga.transpose(1, 0, 2))
+    state_f, y = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = y.transpose(1, 0, 2, 3)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    return y, state_f
+
+
+def mamba2_apply(p, cfg, x, state=None, conv_tail=None, use_scan=False,
+                 chunk: int = 64):
+    """Full block. x: (B,S,d). Returns (out, new_state, new_conv_tail)."""
+    bsz, s, _ = x.shape
+    di, n, h = cfg.mamba_d_inner, cfg.ssm_state, cfg.mamba_heads
+    if state is None:
+        state = jnp.zeros((bsz, h, di // h, n), jnp.float32)
+    zxbcdt = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_act, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    use_scan = use_scan or (s % chunk != 0)  # decode / unaligned fallback
+    core = mamba2_core_scan if use_scan else mamba2_core_chunked
+    if use_scan:
+        y, state_f = core(p, cfg, xbc_act, dt_raw, state)
+    else:
+        y, state_f = core(p, cfg, xbc_act, dt_raw, state, chunk)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])    # gated norm
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, state_f, new_tail

@@ -1,0 +1,221 @@
+"""RWKV-6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Recurrence (per head, state S in R^{dk x dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T S_{t-1} + (u ⊙ r_t)·k_t  v_t
+with w_t = exp(-exp(decay_t)) data-dependent (LoRA on the shifted input).
+
+Two equivalent evaluation paths:
+  * ``rwkv_scan``    — the recurrence via lax.scan (oracle; O(T) sequential),
+  * ``rwkv_chunked`` — chunkwise-parallel form (production): within a chunk
+    of length C the contribution is a strictly-lower-triangular matmul over
+    decay-rescaled r̃/k̃ (the *triangular block domain again* — the paper's
+    2D map applies to the chunk-pair space), across chunks a scan over the
+    per-chunk state update  S <- A_C ⊙ S + k̃_C^T V.
+
+The paper's technique does not apply to RWKV attention (attention-free);
+see DESIGN.md §Arch-applicability.  Decode is O(1)/token via the state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import EMBED, FFN, HEADS, dense_init, rms_norm
+
+
+def rwkv_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.rwkv_heads
+    hd = d // h
+    ks = jax.random.split(key, 12)
+    lora = cfg.rwkv_decay_lora
+    return {
+        # token-shift mix coefficients (static lerp per projection)
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        # data-dependent decay LoRA: d -> lora -> d
+        "wd1": dense_init(ks[4], d, lora, dtype),
+        "wd2": dense_init(ks[5], lora, d, dtype, scale=0.01),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "bonus_u": jnp.full((h, hd), 0.5, jnp.float32),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "ln_x": jnp.ones((d,), dtype),  # per-head group norm weight
+    }
+
+
+def rwkv_block_specs(cfg):
+    return {
+        "mix_r": (EMBED,), "mix_k": (EMBED,), "mix_v": (EMBED,),
+        "mix_g": (EMBED,), "mix_w": (EMBED,),
+        "wr": (EMBED, FFN), "wk": (EMBED, FFN), "wv": (EMBED, FFN),
+        "wg": (EMBED, FFN),
+        "wd1": (EMBED, None), "wd2": (None, FFN),
+        "decay_base": (None,), "bonus_u": (HEADS, None),
+        "wo": (FFN, EMBED), "ln_x": (EMBED,),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x_{t-1} with x_prev filling t=0; returns shifted tensor.
+
+    x_prev state is carried fp32 (decode caches); cast to the compute dtype
+    so bf16 models stay bf16 through the mix projections.
+    """
+    return jnp.concatenate(
+        [x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _projections(p, cfg, x, x_prev):
+    xs = _token_shift(x, x_prev)
+
+    def mix(m):
+        return x * m + xs * (1.0 - m)
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mix_r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", mix(p["mix_k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", mix(p["mix_v"]), p["wv"])
+    g = jnp.einsum("bsd,de->bse", mix(p["mix_g"]), p["wg"])
+    dec = p["decay_base"] + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mix_w"]), p["wd1"])),
+        p["wd2"],
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))  # decay in (0, 1), fp32
+    return r, k, v, g, w
+
+
+def _split_heads(t, h):
+    b, s, d = t.shape
+    return t.reshape(b, s, h, d // h)
+
+
+def rwkv_mix_chunked(p, cfg, x, x_prev, state, chunk: int = 64):
+    """Chunkwise-parallel WKV.  x: (B,S,d); state: (B,h,dk,dv) carried in.
+
+    Returns (out, last_x, new_state).
+    """
+    b, s, d = x.shape
+    h = cfg.rwkv_heads
+    hd = d // h
+    r, k, v, g, w = _projections(p, cfg, x, x_prev)
+    rh = _split_heads(r, h).astype(jnp.float32)
+    kh = _split_heads(k, h).astype(jnp.float32)
+    vh = _split_heads(v, h).astype(jnp.float32)
+    wh = _split_heads(w, h)  # fp32 decays (B,S,h,hd)
+    u = p["bonus_u"]          # (h, hd)
+
+    nc = s // chunk
+    assert s % chunk == 0, "sequence must be chunk-aligned"
+    # (B, nc, C, h, hd) -> (nc, B, h, C, hd)
+    def chunkify(t):
+        return t.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(chunkify, (rh, kh, vh, wh))
+
+    logw = jnp.log(wc)                        # (nc,B,h,C,hd)
+    clog = jnp.cumsum(logw, axis=3)           # A_t = prod_{u<=t} w_u
+    a_end = jnp.exp(clog[:, :, :, -1:, :])    # A_C
+
+    # r̃_t = r_t * A_{t-1} ; k̃_s = k_s / A_s  (A_0 = 1)
+    a_prev = jnp.exp(jnp.concatenate(
+        [jnp.zeros_like(clog[:, :, :, :1]), clog[:, :, :, :-1]], axis=3))
+    r_t = rc * a_prev
+    k_t = kc * jnp.exp(-clog)
+
+    # intra-chunk: strictly-lower-triangular P + bonus diagonal
+    pmat = jnp.einsum("nbhck,nbhdk->nbhcd", r_t, k_t)   # (nc,B,h,C,C)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    pmat = jnp.where(tril, pmat, 0.0)
+    diag = jnp.einsum("nbhck,nbhck->nbhc", rc * u[None, None, :, None, :], kc)
+    o_intra = jnp.einsum("nbhcd,nbhdk->nbhck", pmat, vc) + diag[..., None] * vc
+
+    # cross-chunk: scan the state;  o_cross_t = r̃_t^T S_in
+    kt_v = jnp.einsum("nbhck,nbhcv->nbhkv", k_t, vc)    # sum_s k̃_s v_s^T
+
+    def step(S, inputs):
+        r_tc, a_e, kv = inputs
+        o_cross = jnp.einsum("bhck,bhkv->bhcv", r_tc, S)
+        # S_out = A_C ⊙ S_in + Σ_s (A_C/A_s) k_s v_s^T = A_C ⊙ (S_in + kv)
+        a_vec = a_e[:, :, 0, :]                      # (B, h, hd_k)
+        S_new = jnp.einsum("bhk,bhkv->bhkv", a_vec, S + kv)
+        return S_new, o_cross
+
+    state_f, o_cross = jax.lax.scan(step, state.astype(jnp.float32),
+                                    (r_t, a_end, kt_v))
+    o = (o_intra + o_cross).transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+
+    # per-head group norm, then output gate
+    o = rms_norm(o, jnp.ones((hd,), o.dtype)).reshape(b, s, d).astype(x.dtype)
+    o = o * p["ln_x"]
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, x[:, -1, :].astype(jnp.float32), state_f.astype(state.dtype)
+
+
+def rwkv_mix_scan(p, cfg, x, x_prev, state):
+    """Oracle: the recurrence step-by-step via lax.scan."""
+    b, s, d = x.shape
+    h = cfg.rwkv_heads
+    hd = d // h
+    r, k, v, g, w = _projections(p, cfg, x, x_prev)
+    rh = _split_heads(r, h).astype(jnp.float32)
+    kh = _split_heads(k, h).astype(jnp.float32)
+    vh = _split_heads(v, h).astype(jnp.float32)
+    wh = _split_heads(w, h)
+    u = p["bonus_u"]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,h,hd)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", r_t * u[None], k_t, v_t)
+        S_new = w_t[..., None] * S + k_t[..., None] * v_t[..., None, :]
+        return S_new, o_t
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rh, kh, vh, wh))
+    state_f, o = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    o = o.transpose(1, 0, 2, 3).reshape(b, s, h, hd)
+    o = rms_norm(o, jnp.ones((hd,), o.dtype)).reshape(b, s, d).astype(x.dtype)
+    o = o * p["ln_x"]
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, x[:, -1, :].astype(jnp.float32), state_f.astype(state.dtype)
+
+
+# -- channel mix (RWKV FFN) --------------------------------------------------
+
+
+def rwkv_cmix_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv_cmix_specs(cfg):
+    return {
+        "mix_k": (EMBED,), "mix_r": (EMBED,),
+        "wk": (EMBED, FFN), "wv": (FFN, EMBED), "wr": (EMBED, None),
+    }
+
+
+def rwkv_cmix_apply(p, cfg, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    xk = x * p["mix_k"] + xs * (1.0 - p["mix_k"])
+    xr = x * p["mix_r"] + xs * (1.0 - p["mix_r"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return rr * vv, x[:, -1, :].astype(jnp.float32)

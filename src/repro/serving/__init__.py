@@ -1,0 +1,1 @@
+"""Serving layer: prefill + batched decode with per-family caches."""

@@ -1,0 +1,60 @@
+"""Minimal batched serving engine: prefill once, decode greedily/sampled.
+
+Static-shape batching (the dry-run serving shapes): a batch of requests is
+padded to a common prompt length, prefilled in one pass, then decoded
+step-by-step with jitted `decode_step`.  Continuous batching at production
+scale would slot new requests into freed cache rows; the cache layout here
+(batch-major, fixed max_seq) is chosen so that extension is a row update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray          # (B, prompt + generated)
+    steps: int
+
+
+def greedy(logits, key=None, temperature: float = 0.0):
+    if temperature and key is not None:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1)
+
+
+def generate(params, cfg, prompts: jnp.ndarray, max_new_tokens: int,
+             extra=None, temperature: float = 0.0, seed: int = 0,
+             eos_id: int | None = None) -> GenerationResult:
+    """prompts: (B, S) int32, already padded. Greedy when temperature=0."""
+    b, s = prompts.shape
+    max_seq = cfg.max_seq
+    assert s + max_new_tokens <= max_seq, "cache too small"
+
+    prefill = jax.jit(lambda p, t, e: T.prefill(p, cfg, t, e))
+    step = jax.jit(lambda p, t, c, e: T.decode_step(p, cfg, t, c, e))
+
+    logits, cache = prefill(params, prompts, extra)
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+    tok = greedy(logits[:, -1:, : cfg.vocab_size], key, temperature)
+    tok = tok.astype(jnp.int32)
+    done = jnp.zeros((b, 1), bool)
+    n = 0
+    for i in range(max_new_tokens):
+        out.append(tok)
+        n += 1
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+            if bool(done.all()):
+                break
+        key, sub = jax.random.split(key)
+        logits, cache = step(params, tok, cache, extra)
+        tok = greedy(logits[:, :, : cfg.vocab_size], sub, temperature)
+        tok = tok.astype(jnp.int32)
+    return GenerationResult(tokens=jnp.concatenate(out, axis=1), steps=n)

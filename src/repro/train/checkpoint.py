@@ -1,0 +1,110 @@
+"""Checkpointing: atomic, restart-safe, mesh-elastic.
+
+Layout:
+    <dir>/step_<n>.tmp/        — in-progress write
+    <dir>/step_<n>/            — complete (atomic rename)
+        arrays_<proc>.npz      — flattened leaf arrays (this process's data)
+        manifest.json          — step, tree structure, shapes, dtypes
+
+Restore reshards onto whatever mesh/sharding the *current* job uses
+(`jax.device_put` against target shardings), so a checkpoint written on a
+(2,16,16) multi-pod mesh restores onto (16,16) survivors — the elastic
+scaling path.  Single-controller here (process 0 writes global arrays);
+the per-process file naming and manifest carry the multi-host extension.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, params, opt_state=None, extra: dict | None = None):
+    """Atomic checkpoint write. Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    state = {"params": params}
+    if opt_state is not None:
+        state["opt_state"] = opt_state
+    leaves, _ = _flatten_with_paths(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
+    np.savez(os.path.join(tmp, f"arrays_{jax.process_index()}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "process_count": jax.process_count(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic completion marker
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template, shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings` (same tree) reshards onto the live mesh —
+    the elastic-restart path; None keeps arrays on the default device."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays_0.npz"))
+    leaves, treedef = _flatten_with_paths(template)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves, _ = _flatten_with_paths(shardings)
+    out = {}
+    for key, tmpl in leaves.items():
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                             f"template {tmpl.shape}")
+        if shard_leaves is not None:
+            out[key] = jax.device_put(arr, shard_leaves[key])
+        else:
+            out[key] = jax.device_put(arr.astype(tmpl.dtype))
+    restored = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template),
+        [out[k] for k in leaves.keys()])
+    return restored, manifest
+
+
+def gc_old(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest `keep` complete checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

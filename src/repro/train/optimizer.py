@@ -1,0 +1,91 @@
+"""AdamW with fp32 moments, global-norm clipping and cosine schedule.
+
+Hand-rolled on pytrees (no optax dependency).  Moments inherit the param
+sharding (ZeRO: with `embed -> data` FSDP rules the optimizer state is
+sharded 2D exactly like the weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_state(params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def state_specs(param_spec_tree):
+    """Logical-axis specs for the optimizer state (same sharding as params)."""
+    return {
+        "step": (),
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptimizerConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(cfg, state["step"])
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_params, {"step": step, "m": new_m, "v": new_v}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

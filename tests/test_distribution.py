@@ -1,0 +1,154 @@
+"""Sharding rules (unit) + multi-device semantics (subprocess, 8 fake devs)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution import sharding as shd
+from repro.distribution.compression import (
+    _dequantize, _quantize, quantization_error_bound,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_resolve_spec_basic():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = shd.resolve_spec(("embed", "ffn"), shd.PARAM_RULES, mesh,
+                            (64, 128))
+    assert spec == P("data", "model")
+
+
+def test_resolve_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # simulate a 16-wide axis via rules on a fake mesh: use shape-aware check
+    mesh16 = jax.make_mesh((1,), ("model",))
+    # 24 heads % 1 == 0 -> sharded; emulate non-divisible with explicit size
+    spec = shd.resolve_spec(("heads",), {"heads": "model"}, mesh16, (24,))
+    assert spec == P("model")
+    # axis absent from mesh -> dropped
+    spec = shd.resolve_spec(("heads",), {"heads": "tensor"}, mesh16, (24,))
+    assert spec == P()
+
+
+def test_resolve_spec_duplicate_axis_dropped():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = shd.resolve_spec(("ffn", "ffn"), shd.PARAM_RULES, mesh, (8, 8))
+    assert spec == P("model")  # second use of the mesh axis is dropped
+
+
+def test_logical_constraint_identity_outside_mesh():
+    x = jnp.ones((4, 4))
+    assert shd.logical_constraint(x, "batch", None) is x
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1000,)) * 3.0)
+    q, s = _quantize(x)
+    back = _dequantize(q, s, x.shape, x.dtype)
+    bound = quantization_error_bound(x) + 1e-6
+    assert float(jnp.max(jnp.abs(back - x))) <= bound
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.distribution import sharding as shd
+    from repro.distribution.compression import compressed_psum_mean
+    from repro.models import transformer as T
+    from repro.train import optimizer as opt, checkpoint as ckpt
+    from repro.train.train_step import TrainConfig, make_train_step
+    from repro.train.data import SyntheticLM, DataConfig
+
+    assert jax.device_count() == 8
+
+    cfg = get_smoke_config("yi-6b")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+    tcfg = TrainConfig()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init_state(params)
+
+    # ---- 1. sharded step == single-device step -------------------------
+    single_p, single_s, single_m = jax.jit(make_train_step(cfg, tcfg))(
+        params, opt_state, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    with shd.use_sharding(mesh):
+        p_sh = shd.param_sharding(T.param_specs(cfg), params, mesh)
+        params_d = jax.device_put(params, p_sh)
+        o_sh = shd.param_sharding(opt.state_specs(T.param_specs(cfg)),
+                                  opt_state, mesh)
+        opt_d = jax.device_put(opt_state, o_sh)
+        bsh = NamedSharding(mesh, P(("data",), None))
+        batch_d = jax.tree.map(lambda t: jax.device_put(t, bsh), batch)
+        sp, ss, sm = jax.jit(make_train_step(cfg, tcfg))(
+            params_d, opt_d, batch_d)
+    assert abs(float(sm["loss"]) - float(single_m["loss"])) < 2e-4, (
+        float(sm["loss"]), float(single_m["loss"]))
+    err = max(float(jnp.max(jnp.abs(np.asarray(a, dtype=np.float32)
+                                    - np.asarray(b, dtype=np.float32))))
+              for a, b in zip(jax.tree.leaves(sp), jax.tree.leaves(single_p)))
+    assert err < 2e-3, err
+    print("OK sharded-step-numerics", float(sm["loss"]), err)
+
+    # ---- 2. elastic checkpoint reshard: (4,2) -> (2,4) ------------------
+    d = "/tmp/elastic_ck"
+    ckpt.save(d, 3, sp, ss)
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    with shd.use_sharding(mesh2):
+        p_sh2 = shd.param_sharding(T.param_specs(cfg), params, mesh2)
+        o_sh2 = shd.param_sharding(opt.state_specs(T.param_specs(cfg)),
+                                   opt_state, mesh2)
+        restored, man = ckpt.restore(
+            d, 3, {"params": params, "opt_state": opt_state},
+            shardings={"params": p_sh2, "opt_state": o_sh2})
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(sp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("OK elastic-reshard")
+
+    # ---- 3. compressed gradient all-reduce ------------------------------
+    mesh1d = jax.make_mesh((8,), ("pod",))
+    rng = np.random.default_rng(1)
+    local = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
+
+    @partial(jax.shard_map, mesh=mesh1d, in_specs=P("pod"),
+             out_specs=P("pod"))
+    def reduce_fn(x):
+        return compressed_psum_mean(x, "pod", 8)
+
+    out = reduce_fn(local)
+    expect = jnp.broadcast_to(local.mean(axis=0, keepdims=True), local.shape)
+    err = float(jnp.max(jnp.abs(out - expect)))
+    assert err < 0.05, err            # int8 quantization error bound
+    assert err > 0.0                  # it IS lossy (sanity that it ran)
+    print("OK compressed-psum", err)
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_semantics_subprocess():
+    """8 fake devices: sharded numerics, elastic reshard, compression."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for marker in ("OK sharded-step-numerics", "OK elastic-reshard",
+                   "OK compressed-psum"):
+        assert marker in res.stdout, res.stdout

@@ -1,0 +1,114 @@
+"""Property tests for the six domains and their ground-truth maps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maps
+from repro.core.domains import DOMAINS
+from repro.core.inverse import isqrt, np_isqrt, np_tet_layer, tet, tri, tri_row
+
+ALL_DOMAINS = sorted(DOMAINS)
+
+
+@pytest.mark.parametrize("name", ALL_DOMAINS)
+def test_map_matches_enumeration(name):
+    d = DOMAINS[name]
+    n = 20_000
+    gt = d.enumerate_points(n)
+    got = maps.np_map(name, np.arange(n))
+    np.testing.assert_array_equal(got, gt)
+
+
+@pytest.mark.parametrize("name", ALL_DOMAINS)
+def test_membership_of_enumerated_points(name):
+    d = DOMAINS[name]
+    pts = d.enumerate_points(5_000)
+    assert d.contains(pts).all()
+
+
+@pytest.mark.parametrize("name", ALL_DOMAINS)
+def test_bijectivity_no_duplicates(name):
+    """The map over [0, N) must produce N distinct coordinates."""
+    from repro.core.validate import encode_coords
+
+    got = maps.np_map(name, np.arange(50_000))
+    assert len(np.unique(encode_coords(got))) == 50_000
+
+
+@given(st.integers(0, 10**12))
+@settings(max_examples=200, deadline=None)
+def test_isqrt_exact(v):
+    r = isqrt(v)
+    assert r * r <= v < (r + 1) * (r + 1)
+
+
+@given(st.integers(0, 10**9))
+@settings(max_examples=200, deadline=None)
+def test_np_isqrt_matches_scalar(v):
+    assert int(np_isqrt(np.array([v]))[0]) == isqrt(v)
+
+
+@given(st.integers(0, 10**9))
+@settings(max_examples=200, deadline=None)
+def test_tri_row_inverse(lam):
+    x = tri_row(lam)
+    assert tri(x) <= lam < tri(x + 1)
+
+
+@given(st.integers(0, 10**9))
+@settings(max_examples=200, deadline=None)
+def test_tet_layer_inverse(lam):
+    z = int(np_tet_layer(np.array([lam]))[0])
+    assert tet(z) <= lam < tet(z + 1)
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=100, deadline=None)
+def test_tri2d_scalar_roundtrip(lam):
+    x, y = maps.map_tri2d(lam)
+    assert 0 <= y <= x
+    assert maps.unmap_tri2d(x, y) == lam
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=100, deadline=None)
+def test_pyramid3d_scalar_roundtrip(lam):
+    x, y, z = maps.map_pyramid3d(lam)
+    assert 0 <= y <= x <= z
+    assert maps.unmap_pyramid3d(x, y, z) == lam
+
+
+@pytest.mark.parametrize("name", ["gasket2d", "carpet2d", "sierpinski3d",
+                                  "menger3d"])
+@given(lam=st.integers(0, 10**6))
+@settings(max_examples=60, deadline=None)
+def test_fractal_roundtrip(name, lam):
+    d = DOMAINS[name]
+    c = maps.map_fractal(d, lam)
+    assert maps.unmap_fractal(d, c) == lam
+
+
+@given(st.integers(2, 10**4))
+@settings(max_examples=50, deadline=None)
+def test_variant_maps_agree_with_ground_truth(lam):
+    for (dom, logic), fn in maps.VARIANT_MAPS.items():
+        assert tuple(fn(lam)) == tuple(maps.SCALAR_MAPS[dom](lam)), (dom, logic)
+
+
+@pytest.mark.parametrize("name", ALL_DOMAINS)
+def test_jnp_map_matches_numpy(name):
+    lams = np.arange(4096)
+    got = np.asarray(maps.jnp_map(name, lams, ndigits=13))
+    np.testing.assert_array_equal(got, maps.np_map(name, lams))
+
+
+def test_paper_block_accounting():
+    """Valid blocks at N=5e8 must equal the paper's 1,953,125 exactly."""
+    for name in ALL_DOMAINS:
+        acc = DOMAINS[name].block_accounting(500_000_000)
+        assert acc["valid_blocks"] == 1_953_125
+    tri = DOMAINS["tri2d"].block_accounting(500_000_000)
+    # BB waste for the triangle is ~50% (paper: 1,959,359 / 3,912,484)
+    assert 0.49 < tri["waste_fraction"] < 0.51
+    s3 = DOMAINS["sierpinski3d"].block_accounting(500_000_000)
+    assert s3["waste_fraction"] > 0.999  # fractal sparsity

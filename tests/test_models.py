@@ -1,0 +1,241 @@
+"""Model-layer tests: per-arch smoke, equivalences, MoE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from types import SimpleNamespace
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models import transformer as T
+from repro.models.common import count_params
+
+
+def _extra_for(cfg, b, key):
+    if cfg.family == "vlm":
+        return jax.random.normal(key, (b, cfg.vision_seq, cfg.d_model),
+                                 jnp.float32)
+    if cfg.family == "audio":
+        return jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model),
+                                 jnp.float32)
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + finiteness."""
+    from repro.train import optimizer as opt
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    assert count_params(params) > 10_000
+    b, s = 2, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    extra = _extra_for(cfg, b, jax.random.PRNGKey(2))
+    logits = T.forward(params, cfg, tokens, extra)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    batch = {"tokens": tokens, "labels": tokens}
+    if extra is not None:
+        batch["extra"] = extra
+    step = make_train_step(cfg, TrainConfig())
+    opt_state = opt.init_state(params)
+    new_params, new_state, metrics = jax.jit(step)(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b_.astype(jnp.float32))))
+                for a, b_ in zip(jax.tree.leaves(new_params),
+                                 jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=16.0)  # no-drop => exact match
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    extra = _extra_for(cfg, b, jax.random.PRNGKey(2))
+    ref = T.forward(params, cfg, tokens, extra)
+    pre, cache = T.prefill(params, cfg, tokens, extra)
+    assert float(jnp.max(jnp.abs(pre - ref))) < 5e-4
+    nt = jnp.argmax(pre[:, -1:], axis=-1).astype(jnp.int32)
+    dec, _ = T.decode_step(params, cfg, nt, cache, extra)
+    full = T.forward(params, cfg, jnp.concatenate([tokens, nt], 1), extra)
+    assert float(jnp.max(jnp.abs(dec[:, 0] - full[:, -1]))) < 5e-3
+
+
+def test_param_spec_trees_mirror_params():
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        specs = T.param_specs(cfg)
+        assert (jax.tree.structure(shapes)
+                == jax.tree.structure(
+                    specs, is_leaf=lambda s: isinstance(s, tuple)))
+        jax.tree.map(lambda s, p: None if len(s) == p.ndim
+                     else pytest.fail(f"{arch}: {s} vs {p.shape}"),
+                     specs, shapes, is_leaf=lambda s: isinstance(s, tuple))
+
+
+# --- attention ---------------------------------------------------------------
+
+
+def test_sdpa_chunked_equals_unchunked():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 512, 4, 32))
+    k = jax.random.normal(ks[1], (2, 512, 2, 32))
+    v = jax.random.normal(ks[2], (2, 512, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(512)[None], (2, 512))
+    full = attn._sdpa(q, k, v, 2, pos, chunk=1024)   # single shot
+    chunked = attn._sdpa(q, k, v, 2, pos, chunk=128)
+    assert float(jnp.max(jnp.abs(full - chunked))) < 1e-5
+
+
+def test_sdpa_cross_no_mask():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 8, 2, 16))
+    k = jax.random.normal(ks[1], (1, 24, 2, 16))
+    v = jax.random.normal(ks[2], (1, 24, 2, 16))
+    out = attn._sdpa(q, k, v, 2, None)
+    assert out.shape == (1, 8, 2, 16)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_gqa_pallas_paths_match_xla():
+    cfg = get_smoke_config("yi-6b").replace(
+        attn_impl="pallas_mapped", attn_block=16, pallas_interpret=True,
+        rope_theta=10000.0)
+    p = attn.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.3
+    out_k, _ = attn.gqa_apply(p, cfg, x)
+    out_x, _ = attn.gqa_apply(p, cfg.replace(attn_impl="xla"), x)
+    assert float(jnp.max(jnp.abs(out_k - out_x))) < 1e-4
+    out_bb, _ = attn.gqa_apply(p, cfg.replace(attn_impl="pallas_bb"), x)
+    assert float(jnp.max(jnp.abs(out_bb - out_x))) < 1e-4
+
+
+def test_mla_cache_decode_matches_full():
+    cfg = get_smoke_config("deepseek-v2-236b")
+    p = attn.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
+    full, _ = attn.mla_apply(p, cfg, x)
+    cache = attn.mla_cache_init(cfg, 2, 32, jnp.float32)
+    pre, cache = attn.mla_apply(p, cfg, x[:, :15],
+                                positions=jnp.arange(15)[None], cache=cache)
+    last, _ = attn.mla_apply(p, cfg, x[:, 15:16],
+                             positions=jnp.full((2, 1), 15), cache=cache)
+    assert float(jnp.max(jnp.abs(last[:, 0] - full[:, 15]))) < 1e-4
+
+
+# --- MoE ---------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    base = dict(d_model=32, n_experts=8, moe_top_k=2, expert_d_ff=64,
+                n_shared_experts=0, capacity_factor=1.25,
+                moe_renormalize=True)
+    base.update(kw)
+    return SimpleNamespace(**base)
+
+
+def test_moe_no_drop_matches_dense_computation():
+    """With huge capacity, MoE == explicit per-token expert mixture."""
+    cfg = _moe_cfg(capacity_factor=100.0)
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32)) * 0.5
+    out = moe_mod.moe_apply(p, cfg, x)
+
+    toks = x.reshape(-1, 32)
+    logits = toks @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, e = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    expected = jnp.zeros_like(toks)
+    for t in range(toks.shape[0]):
+        acc = jnp.zeros((32,))
+        for j in range(2):
+            ei = int(e[t, j])
+            g = jax.nn.silu(toks[t] @ p["gate"][:, ei, :])
+            u = toks[t] @ p["up"][:, ei, :]
+            acc += w[t, j] * ((g * u) @ p["down"][:, ei, :])
+        expected = expected.at[t].set(acc)
+    assert float(jnp.max(jnp.abs(out.reshape(-1, 32) - expected))) < 1e-4
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop assignments (outputs partially zeroed)."""
+    cfg = _moe_cfg(capacity_factor=0.2)
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))
+    out_small = moe_mod.moe_apply(p, cfg, x)
+    out_big = moe_mod.moe_apply(p, _moe_cfg(capacity_factor=100.0), x)
+    assert float(jnp.max(jnp.abs(out_small - out_big))) > 1e-4
+
+
+def test_moe_aux_loss_positive_and_balanced_lower():
+    cfg = _moe_cfg()
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    _, aux = moe_mod.moe_apply(p, cfg, x, with_aux=True)
+    assert float(aux) >= 1.0  # e * sum(f*P) >= 1 by Cauchy-Schwarz
+
+
+# --- SSM equivalences --------------------------------------------------------
+
+
+def test_rwkv_chunked_equals_scan():
+    cfg = SimpleNamespace(d_model=64, rwkv_heads=4, rwkv_decay_lora=16,
+                          d_ff=128)
+    p = rwkv.rwkv_block_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64)) * 0.5
+    xp = jnp.zeros((2, 64))
+    st = jnp.zeros((2, 4, 16, 16))
+    o1, x1, s1 = rwkv.rwkv_mix_scan(p, cfg, x, xp, st)
+    o2, x2, s2 = rwkv.rwkv_mix_chunked(p, cfg, x, xp, st, chunk=32)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-5
+    assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-4
+
+
+def test_mamba2_chunked_equals_scan_and_decode():
+    cfg = SimpleNamespace(d_model=64, mamba_d_inner=128, ssm_state=16,
+                          mamba_heads=4, mamba_conv_width=4)
+    p = m2.mamba2_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64)) * 0.5
+    o1, s1, _ = m2.mamba2_apply(p, cfg, x, use_scan=True)
+    o2, s2, _ = m2.mamba2_apply(p, cfg, x, use_scan=False, chunk=32)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-5
+    # token-by-token decode matches the parallel form
+    st, tail, outs = None, None, []
+    for t in range(8):
+        ot, st, tail = m2.mamba2_apply(p, cfg, x[:, t:t + 1], state=st,
+                                       conv_tail=tail)
+        outs.append(ot)
+    dec = jnp.concatenate(outs, axis=1)
+    assert float(jnp.max(jnp.abs(dec - o1[:, :8]))) < 1e-5
+
+
+def test_full_configs_have_published_dims():
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.kv_lora_rank) == \
+        (60, 5120, 160, 512)
+    c = get_config("qwen3-32b")
+    assert c.qk_norm and c.n_heads == 64 and c.d_ff == 25600
+    c = get_config("rwkv6-3b")
+    assert c.d_model == 2560 and c.attention_type == "none"
+    c = get_config("whisper-medium")
+    assert c.encoder_layers == 24 and c.decoder_layers == 24
+    c = get_config("zamba2-1.2b")
+    assert c.ssm_state == 64 and c.hybrid_attn_every == 6

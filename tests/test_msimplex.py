@@ -1,0 +1,54 @@
+"""Generalized m-simplex maps (paper's future-work direction)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maps import map_pyramid3d, map_tri2d
+from repro.core.msimplex import (
+    block_accounting_msimplex, enumerate_msimplex, map_msimplex,
+    simplex_layer, simplex_size, unmap_msimplex,
+)
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 5])
+def test_map_matches_enumeration(m):
+    n = 2000
+    gt = enumerate_msimplex(n, m)
+    got = np.array([map_msimplex(i, m) for i in range(n)])
+    np.testing.assert_array_equal(got, gt)
+
+
+def test_specializes_to_table_I():
+    """m=2 and m=3 must reproduce the paper's triangular/tetrahedral maps."""
+    for lam in (0, 1, 7, 100, 5000, 99999):
+        x2, y2 = map_tri2d(lam)
+        assert map_msimplex(lam, 2) == (y2, x2)   # sorted-ascending convention
+        x, y, z = map_pyramid3d(lam)
+        assert map_msimplex(lam, 3) == (y, x, z)
+
+
+@given(st.integers(0, 10**8), st.integers(1, 6))
+@settings(max_examples=150, deadline=None)
+def test_layer_inverse(lam, m):
+    x = simplex_layer(lam, m)
+    assert simplex_size(x, m) <= lam < simplex_size(x + 1, m)
+
+
+@given(st.integers(0, 10**7), st.integers(1, 5))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip(lam, m):
+    c = map_msimplex(lam, m)
+    assert all(c[i] <= c[i + 1] for i in range(m - 1))  # sorted invariant
+    assert unmap_msimplex(c) == lam
+
+
+def test_waste_grows_with_dimension():
+    """The paper's 2D ~50% / 3D ~83% BB waste generalizes: 1 - 1/m!."""
+    prev = 0.0
+    for m in (2, 3, 4, 5):
+        acc = block_accounting_msimplex(10**6, m)
+        assert acc["waste_fraction"] > prev
+        assert acc["waste_fraction"] == pytest.approx(
+            acc["asymptotic_waste"], abs=0.08)
+        prev = acc["waste_fraction"]
+    assert block_accounting_msimplex(10**6, 5)["asymptotic_waste"] > 0.99

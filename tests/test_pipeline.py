@@ -1,0 +1,134 @@
+"""Pipeline: prompt building, synthesis rules, mock backend replay, energy."""
+import pytest
+
+from repro.core import paper_tables as pt
+from repro.core import synthesis
+from repro.core.backends import (
+    CODE_TEMPLATES, MockLLMBackend, build_prompt, mock_behavior,
+)
+from repro.core.complexity import classify
+from repro.core.domains import DOMAINS
+from repro.core.energy import (
+    amortization, estimate_bounding_box, estimate_mapped, points_per_joule,
+)
+from repro.core.maps import VARIANT_MAPS
+from repro.core.pipeline import derive_mapping
+
+
+def test_prompt_contains_rules_and_points():
+    p = build_prompt(DOMAINS["tri2d"], 20)
+    assert "map_to_coordinates" in p
+    assert "0 -> (0, 0)" in p and "2 -> (1, 1)" in p
+    assert p.count("->") >= 20
+
+
+def test_synthesis_rejects_syntax_error():
+    with pytest.raises(synthesis.SynthesisError):
+        synthesis.synthesize("def map_to_coordinates(n:\n  return")
+
+
+def test_synthesis_rejects_wrong_name():
+    with pytest.raises(synthesis.SynthesisError):
+        synthesis.synthesize("def f(n):\n    return (n, n)\n")
+
+
+def test_synthesis_rejects_forbidden_import():
+    code = "import os\ndef map_to_coordinates(n):\n    return (n, n)\n"
+    with pytest.raises(synthesis.SynthesisError):
+        synthesis.synthesize(code)
+
+
+def test_synthesis_flags_hardcoded_chains():
+    code = ("def map_to_coordinates(n):\n"
+            + "".join(f"    if n == {i}:\n        return ({i}, 0)\n"
+                      for i in range(8))
+            + "    return (n, 0)\n")
+    s = synthesis.synthesize(code)
+    assert any("hardcoded" in v for v in s.rule_violations)
+
+
+def test_synthesis_sandbox_blocks_os_access():
+    code = ("def map_to_coordinates(n):\n"
+            "    __import__('os').system('true')\n"
+            "    return (n, n)\n")
+    with pytest.raises(synthesis.SynthesisError):
+        synthesis.synthesize(code)
+
+
+@pytest.mark.parametrize("dom_logic", sorted(CODE_TEMPLATES))
+def test_all_code_templates_are_perfect(dom_logic):
+    dom, logic = dom_logic
+    s = synthesis.synthesize(CODE_TEMPLATES[dom_logic])
+    gt = DOMAINS[dom].enumerate_points(3000)
+    for lam in (0, 1, 2, 17, 999, 2999):
+        assert tuple(s.fn(lam)) == tuple(gt[lam]), (dom, logic, lam)
+    with pytest.raises(ValueError):
+        s.fn(-1)
+
+
+def test_mock_backend_replays_nc_cells():
+    behavior, code = mock_behavior("gasket2d", "Qw3:235b", 20)
+    assert behavior == "noncompiling"
+    with pytest.raises(synthesis.SynthesisError):
+        synthesis.synthesize(code)
+
+
+def test_mock_backend_energy_scales_with_cot():
+    r1 = MockLLMBackend("R1:70b").generate(
+        "x" * 400, meta={"domain": "tri2d", "stage": 20})
+    lla = MockLLMBackend("Lla3.3:70b").generate(
+        "x" * 400, meta={"domain": "tri2d", "stage": 20})
+    assert r1.joules > lla.joules  # CoT reasoning penalty (Sec. V.B)
+
+
+def test_derive_mapping_perfect_cell():
+    res = derive_mapping(DOMAINS["tri2d"], MockLLMBackend("OSS:120b"), 20,
+                         n_validate=5000)
+    assert res.perfect and res.complexity_class == "O(1)"
+    am = res.amortization()
+    assert am.runs_to_break_even < 100
+
+
+@pytest.mark.parametrize("dom,logic,expected", [
+    ("tri2d", "analytical", "O(1)"),
+    ("tri2d", "binsearch", "O(log N)"),
+    ("pyramid3d", "linear", "O(N^1/3)"),
+    ("gasket2d", "bitwise", "O(log N)"),
+    ("menger3d", "bitwise", "O(log N)"),
+])
+def test_complexity_classification(dom, logic, expected):
+    assert classify(VARIANT_MAPS[(dom, logic)])["class"] == expected
+
+
+def test_paper_accuracy_tables_complete():
+    for dom, table in pt.ACCURACY.items():
+        assert set(table) == set(pt.MODELS), dom
+        for rows in table.values():
+            assert len(rows) == 3
+
+
+def test_energy_model_matches_paper_rows():
+    """Calibrated model must reproduce Table VIII/IX anchor times exactly."""
+    tri = DOMAINS["tri2d"]
+    est = estimate_mapped(tri, "analytical", 500_000_000)
+    assert est.time_ms == pytest.approx(1.46, rel=0.01)
+    est_bin = estimate_mapped(tri, "binsearch", 500_000_000)
+    assert est_bin.time_ms == pytest.approx(14.86, rel=0.01)
+    pyr = DOMAINS["pyramid3d"]
+    assert estimate_mapped(pyr, "linear", 500_000_000).time_ms == \
+        pytest.approx(117.03, rel=0.01)
+    bb = estimate_bounding_box(tri, 500_000_000)
+    assert bb.wasted_blocks > 0 and bb.time_ms > 100
+
+
+def test_amortization_fractal_first_run():
+    """Paper: fractal-domain savings amortize the inference instantly."""
+    am = amortization(DOMAINS["sierpinski3d"], "bitwise",
+                      inference_j=5000.0)
+    assert am.runs_to_break_even < 1.0
+    assert am.speedup > 1000 and am.energy_reduction > 1000
+
+
+def test_points_per_joule():
+    assert points_per_joule(1_000_000, 100.0) == 10_000.0
+    assert points_per_joule(1, 0.0) == 0.0

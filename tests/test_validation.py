@@ -1,0 +1,86 @@
+"""Validator semantics: ordered vs any-order vs bijectivity (Sec. IV)."""
+import numpy as np
+import pytest
+
+from repro.core import maps
+from repro.core.domains import DOMAINS
+from repro.core.validate import (
+    ValidationReport, encode_coords, evaluate_candidate_array,
+    validate_scalar_fn, validate_vectorized,
+)
+
+
+@pytest.fixture(scope="module")
+def tri_gt():
+    return DOMAINS["tri2d"].enumerate_points(10_000)
+
+
+def test_perfect_candidate(tri_gt):
+    rep = validate_vectorized(maps.np_map_tri2d, DOMAINS["tri2d"], 10_000,
+                              gt=tri_gt)
+    assert rep.ordered == 1.0 and rep.any_order == 1.0 and rep.bijective
+
+
+def test_permuted_candidate_is_silver(tri_gt):
+    """Row-reversed traversal: any-order 100%, ordered < 100%."""
+    def permuted(lams):
+        xy = maps.np_map_tri2d(lams)
+        return np.stack([xy[:, 0], xy[:, 0] - xy[:, 1]], axis=-1)
+
+    n = DOMAINS["tri2d"].size(140)  # full triangle => permutation is onto
+    rep = validate_vectorized(permuted, DOMAINS["tri2d"], n)
+    assert rep.any_order == 1.0
+    assert rep.ordered < 0.2
+    assert rep.bijective  # still a bijection, just reordered
+
+
+def test_duplicates_detected():
+    gt = DOMAINS["tri2d"].enumerate_points(1000)
+    pred = gt.copy()
+    pred[500:] = pred[:500]
+    rep = evaluate_candidate_array(pred, gt, 1000)
+    assert rep.duplicates > 0 and not rep.bijective
+    assert rep.any_order == 0.5
+
+
+def test_out_of_domain_detected():
+    gt = DOMAINS["tri2d"].enumerate_points(1000)
+    pred = gt.copy()
+    pred[:, 1] += 10**6  # push everything out of the GT set
+    rep = evaluate_candidate_array(pred, gt, 1000)
+    assert rep.out_of_domain > 0 and rep.any_order == 0.0
+
+
+def test_scalar_runtime_error_is_nc():
+    rep = validate_scalar_fn(lambda n: 1 // 0, DOMAINS["tri2d"], 100)
+    assert not rep.compiled and rep.ordered == 0.0
+
+
+def test_scalar_wrong_arity_rejected():
+    rep = validate_scalar_fn(lambda n: (n, n, n), DOMAINS["tri2d"], 100)
+    assert not rep.compiled
+
+
+def test_negative_coords_rejected():
+    gt = DOMAINS["tri2d"].enumerate_points(100)
+    pred = gt.copy()
+    pred[0, 0] = -1
+    rep = evaluate_candidate_array(pred, gt, 100)
+    assert not rep.compiled
+
+
+def test_encode_coords_unique_per_coordinate():
+    pts = DOMAINS["menger3d"].enumerate_points(8000)
+    keys = encode_coords(pts)
+    assert len(np.unique(keys)) == len(pts)
+
+
+def test_subsampled_validation(tri_gt):
+    rep = validate_scalar_fn(maps.map_tri2d, DOMAINS["tri2d"], 10_000,
+                             gt=tri_gt, sample_every=7)
+    assert rep.ordered == 1.0 and rep.bijective
+
+
+def test_report_pct_properties():
+    rep = ValidationReport(100, 0.5, 0.75, False, 1, 2)
+    assert rep.ordered_pct == 50.0 and rep.any_order_pct == 75.0
