@@ -13,9 +13,8 @@ import time
 
 from benchmarks.common import emit, header
 from repro.core import paper_tables as pt
-from repro.core.backends import MockLLMBackend
 from repro.core.domains import DOMAINS
-from repro.core.pipeline import derive_mapping
+from repro.core.pipeline import run_grid
 
 TABLE_OF = {
     "tri2d": "II", "gasket2d": "III", "carpet2d": "IV",
@@ -29,19 +28,18 @@ def run(n_validate: int = 100_000, sample_every: int = 50) -> dict:
     for dom_name in ("tri2d", "gasket2d", "carpet2d", "pyramid3d",
                      "sierpinski3d", "menger3d"):
         dom = DOMAINS[dom_name]
-        gt = dom.enumerate_points(n_validate)
         header(f"Table {TABLE_OF[dom_name]}: {dom.paper_name} "
                f"(live validation over {n_validate:,} pts)")
         print(f"{'model':14s}{'stage':>6s} {'pub ord':>9s}{'pub any':>9s}"
               f"{'live ord':>10s}{'live any':>10s}  status")
         t0 = time.perf_counter()
+        grid = run_grid(domains=[dom_name], models=pt.MODELS,
+                        stages=pt.STAGES, n_validate=n_validate,
+                        sample_every=sample_every)
         for model in pt.MODELS:
             for si, stage in enumerate(pt.STAGES):
                 pub_o, pub_a, pub_ok = pt.ACCURACY[dom_name][model][si]
-                res = derive_mapping(
-                    dom, MockLLMBackend(model), stage,
-                    n_validate=n_validate, gt=gt,
-                    sample_every=sample_every)
+                res = grid[(dom_name, model, stage)]
                 live_o = res.report.ordered_pct
                 live_a = res.report.any_order_pct
                 checked += 1

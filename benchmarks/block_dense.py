@@ -5,6 +5,9 @@ Three evidence tiers per row:
   2. calibrated A100 cost model (reproduces the paper's ms/J anchors),
   3. measured interpret-mode Pallas kernel ratios at reduced N (CPU) plus a
      TPU-v5e roofline projection for the mapped kernel.
+
+Every row resolves its logic class through the MapRegistry — an unregistered
+(domain, logic) pair fails loudly instead of silently mispricing a row.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ from benchmarks.common import emit, header, timed
 from repro.core import paper_tables as pt
 from repro.core.domains import DOMAINS
 from repro.core.energy import estimate_bounding_box, estimate_mapped
+from repro.core.registry import REGISTRY
 from repro.kernels.domain_map.ops import bb_membership, map_coordinates
 
 N_PAPER = 500_000_000
@@ -34,11 +38,15 @@ ROWS_VIII = {
     ],
 }
 
+# cost-model-only rows with no distinct scalar implementation in the registry
+_COST_MODEL_ONLY = {"binsearch_linear"}
+
 
 def run(measure_n: int = 65_536) -> dict:
     out = {}
     for dom_name, rows in ROWS_VIII.items():
         dom = DOMAINS[dom_name]
+        entry = REGISTRY.ground_truth(dom_name)
         header(f"Table VIII: {dom.paper_name}  (N = 5e8, A100-calibrated)")
         bb = estimate_bounding_box(dom, N_PAPER)
         paper_bb = (pt.TABLE_VIII[dom_name]["bounding_box"])
@@ -49,6 +57,8 @@ def run(measure_n: int = 65_536) -> dict:
               f"{bb.energy_j:>10.2f}  if O(1)"
               f"   [paper: {paper_bb['time_ms']}ms {paper_bb['energy_j']}J]")
         for label, logic in rows:
+            if logic not in _COST_MODEL_ONLY:
+                REGISTRY.resolve(dom_name, logic)  # must be registered
             est = estimate_mapped(dom, logic, N_PAPER)
             print(f"{label:44s}{est.time_ms:>10.2f}{est.total_blocks:>14,}"
                   f"{0:>14,}{est.energy_j:>10.2f}  {logic}")
@@ -61,11 +71,12 @@ def run(measure_n: int = 65_536) -> dict:
         assert best.total_blocks == \
             pt.TABLE_VIII[dom_name]["paper"]["total_blocks"]
 
-        # measured (CPU interpret): mapped map-eval vs BB membership+filter
+        # measured (CPU interpret): mapped map-eval vs BB membership+filter,
+        # geometry resolved from the registry entry
         ext = dom.bounding_box_extent(measure_n)
-        _, us_map = timed(map_coordinates, dom_name, measure_n,
+        _, us_map = timed(map_coordinates, entry, measure_n,
                           interpret=True, repeats=2)
-        _, us_bb = timed(bb_membership, dom_name, ext, interpret=True,
+        _, us_bb = timed(bb_membership, entry, ext, interpret=True,
                          repeats=2)
         work_ratio = int(np.prod(ext)) / measure_n
         print(f"measured interpret-mode @N={measure_n:,}: mapped "

@@ -13,6 +13,7 @@ from benchmarks.common import emit, header, timed
 from repro.core import paper_tables as pt
 from repro.core.domains import DOMAINS
 from repro.core.energy import estimate_bounding_box, estimate_mapped
+from repro.core.registry import REGISTRY
 from repro.kernels.domain_map.ops import bb_membership, map_coordinates
 
 N_PAPER = 500_000_000
@@ -20,8 +21,9 @@ N_PAPER = 500_000_000
 
 def run(measure_n: int = 65_536) -> dict:
     out = {}
-    for dom_name, logic in (("gasket2d", "bitwise"),
-                            ("sierpinski3d", "bitwise")):
+    for dom_name in ("gasket2d", "sierpinski3d"):
+        entry = REGISTRY.ground_truth(dom_name)
+        logic = entry.logic
         dom = DOMAINS[dom_name]
         header(f"Table IX: {dom.paper_name}  (N = 5e8)")
         bb = estimate_bounding_box(dom, N_PAPER)
@@ -47,9 +49,9 @@ def run(measure_n: int = 65_536) -> dict:
         assert mp.total_blocks == paper["paper"]["total_blocks"]
 
         ext = dom.bounding_box_extent(measure_n)
-        _, us_map = timed(map_coordinates, dom_name, measure_n,
+        _, us_map = timed(map_coordinates, entry, measure_n,
                           interpret=True, repeats=2)
-        _, us_bb = timed(bb_membership, dom_name, ext, interpret=True,
+        _, us_bb = timed(bb_membership, entry, ext, interpret=True,
                          repeats=2)
         print(f"measured interpret-mode @N={measure_n:,}: mapped "
               f"{us_map / 1e3:.1f}ms vs BB-box {us_bb / 1e3:.1f}ms over "

@@ -1,36 +1,38 @@
 """Full derivation sweep: every domain x a chosen model, with deployment
-accounting — the operational framework of paper Fig. 3 over all six domains.
+accounting — the operational framework of paper Fig. 3 over all six domains,
+driven by the artifact layer: each cell is a cached ``MappingArtifact``, so
+a second run of this script performs zero LLM calls and zero re-validation.
 
     PYTHONPATH=src python examples/derive_and_deploy.py [model]
 """
 import sys
 
-from repro.core.backends import MockLLMBackend
 from repro.core.domains import DOMAINS
-from repro.core.energy import estimate_bounding_box, estimate_mapped
-from repro.core.pipeline import derive_mapping
+from repro.core.pipeline import run_grid
+from repro.launch.analytic import artifact_deployment_analytics
 
 model = sys.argv[1] if len(sys.argv) > 1 else "OSS:120b"
-backend = MockLLMBackend(model)
 N_DEPLOY = 500_000_000
 
-print(f"model = {backend.name}\n")
+grid = run_grid(domains=sorted(DOMAINS), models=[model], stages=(20, 50, 100),
+                n_validate=50_000, sample_every=10)
+hits = sum(1 for r in grid.values() if r.cache_hit)
+
+print(f"model = {model}   ({hits}/{len(grid)} cells from artifact cache)\n")
 print(f"{'domain':22s}{'stage':>6s}{'ordered':>9s}{'any':>8s}{'class':>10s}"
       f"{'speedup':>9s}{'energy x':>9s}")
 for name, dom in sorted(DOMAINS.items()):
     best = None
     for stage in (20, 50, 100):
-        res = derive_mapping(dom, backend, stage, n_validate=50_000,
-                             sample_every=10)
+        res = grid[(name, model, stage)]
         if best is None or res.report.ordered > best[1].report.ordered:
             best = (stage, res)
     stage, res = best
-    if res.perfect:
-        logic = ("analytical" if dom.kind == "dense" else "bitwise")
-        bb = estimate_bounding_box(dom, N_DEPLOY)
-        mp = estimate_mapped(dom, logic, N_DEPLOY)
-        sp = f"{bb.time_ms / mp.time_ms:8.0f}x"
-        ex = f"{bb.energy_j / mp.energy_j:8.0f}x"
+    art = res.artifact
+    if art is not None and art.deployable:
+        dep = artifact_deployment_analytics(art, N_DEPLOY)
+        sp = f"{dep['speedup']:8.0f}x"
+        ex = f"{dep['energy_reduction']:8.0f}x"
     else:
         sp = ex = "      --"
     print(f"{dom.paper_name:22s}{stage:>6d}{res.report.ordered_pct:>8.1f}%"

@@ -1,6 +1,14 @@
 """Core library: the paper's contribution — automated derivation and
 deployment of exact thread-mapping functions for non-box domains."""
+from repro.core.artifact import (  # noqa: F401
+    ArtifactCache, MappingArtifact, cache_key, default_cache,
+)
 from repro.core.domains import DOMAINS, Domain, get_domain  # noqa: F401
 from repro.core.maps import SCALAR_MAPS, VARIANT_MAPS, jnp_map, np_map  # noqa: F401
-from repro.core.pipeline import DerivationResult, derive_mapping  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    DerivationResult, derive_mapping, run_grid,
+)
+from repro.core.registry import (  # noqa: F401
+    REGISTRY, MapEntry, MapRegistry, get_registry, register_map,
+)
 from repro.core.validate import ValidationReport  # noqa: F401

@@ -1,0 +1,288 @@
+"""MappingArtifact — the persistent, registered product of a derivation.
+
+The paper's economic claim is that LLM derivation is a one-time upfront
+investment amortized across every subsequent launch.  This module makes that
+literal: a successful (domain, model, stage) derivation becomes a
+``MappingArtifact`` — validated source, accuracy report digest, complexity
+class, inference-energy metadata, and a scalar callable rebuilt on demand
+from the validated source.  The pipeline persists each cell (successes and
+NC failures alike) as a JSON derivation record in the content-addressed
+on-disk cache below, so repeated pipeline calls skip inference *and* the
+10^6-point validation entirely; ``MappingArtifact.to_record``/``from_record``
+additionally serialize a standalone artifact for export (e.g. serving a
+shared artifact store).
+
+Cache layout:    <root>/<key>.json            (schema-versioned records)
+Cache root:      $REPRO_ARTIFACT_CACHE, else ~/.cache/repro_thread_maps
+Key:             sha256 over {domain, model, stage, sha256(prompt),
+                 n_validate, sample_every} — any change to the prompt
+                 template, sampling stage or validation spec changes the key,
+                 which is the cache's only invalidation rule (plus the schema
+                 version stored in each record).
+Opt out:         REPRO_ARTIFACT_CACHE=off  (or "0" / "none")
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+from repro.core import synthesis, validate
+from repro.core.domains import Domain, get_domain
+from repro.core.registry import REGISTRY, MapRegistry
+
+SCHEMA_VERSION = 1
+
+#: complexity class -> calibrated logic-class table key (Sec. V.C costs).
+_DENSE_LOGIC = {
+    "O(1)": "analytical",
+    "O(log N)": "binsearch",
+    "O(N^1/3)": "linear",
+    "O(N^1/2)": "linear",
+    "O(N)": "linear",
+}
+_FRACTAL_LOGIC = {
+    "O(1)": "bitwise",
+    "O(log N)": "bitwise",
+    "O(N^1/3)": "linear",
+    "O(N^1/2)": "linear",
+    "O(N)": "linear",
+}
+
+
+def logic_for(complexity_class: str | None, domain: Domain) -> str:
+    """Map a measured complexity class onto the calibrated logic table."""
+    table = _DENSE_LOGIC if domain.kind == "dense" else _FRACTAL_LOGIC
+    default = "analytical" if domain.kind == "dense" else "bitwise"
+    return table.get(complexity_class or "", default)
+
+
+# ---------------------------------------------------------------------------
+# MappingArtifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MappingArtifact:
+    """A validated thread map plus everything deployment needs to trust it."""
+
+    domain: str
+    model: str
+    stage: int
+    source: str                       # validated map_to_coordinates source
+    complexity_class: str | None
+    report: validate.ValidationReport
+    inference_joules: float
+    inference_seconds: float          # derivation wall time (one-time cost)
+    cache_key: str | None = None
+    created_unix: float = dataclasses.field(default_factory=time.time)
+    _scalar: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def domainobj(self) -> Domain:
+        return get_domain(self.domain)
+
+    @property
+    def logic(self) -> str:
+        return logic_for(self.complexity_class, self.domainobj)
+
+    @property
+    def report_digest(self) -> str:
+        payload = json.dumps(dataclasses.asdict(self.report), sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    @property
+    def deployable(self) -> bool:
+        """Only a 100%-ordered map may drive the mapped-grid kernel."""
+        return self.report.error is None and self.report.ordered >= 1.0
+
+    # -- tiers -------------------------------------------------------------
+    def scalar_fn(self) -> Callable:
+        """Exact scalar callable, rebuilt from the validated source on first
+        use (compile + probe only — the cached report vouches for accuracy)."""
+        if self._scalar is None:
+            self._scalar = synthesis.synthesize(self.source).fn
+        return self._scalar
+
+    def registered_entry(self):
+        """The registry's ground-truth entry this artifact deploys through
+        (vectorized/pallas tiers are per-domain geometry, licensed by the
+        artifact's validation report)."""
+        if not self.deployable:
+            raise ValueError(
+                f"artifact ({self.domain}, {self.model}, s{self.stage}) is "
+                f"not deployable: ordered={self.report.ordered_pct:.2f}% "
+                f"(error={self.report.error!r})")
+        return REGISTRY.ground_truth(self.domain)
+
+    def register(self, registry: MapRegistry | None = None,
+                 logic: str | None = None):
+        """Expose the derived scalar map through a registry under a
+        model-attributed logic key (default ``derived:<model>:s<stage>``)."""
+        reg = registry if registry is not None else REGISTRY
+        logic = logic or f"derived:{self.model}:s{self.stage}"
+        return reg.register(
+            self.domain, logic,
+            tiers={"scalar": self.scalar_fn()},
+            complexity_class=self.complexity_class,
+        )
+
+    # -- (de)serialization -------------------------------------------------
+    def to_record(self) -> dict[str, Any]:
+        return {
+            "domain": self.domain, "model": self.model, "stage": self.stage,
+            "source": self.source, "complexity_class": self.complexity_class,
+            "report": dataclasses.asdict(self.report),
+            "report_digest": self.report_digest,
+            "inference_joules": self.inference_joules,
+            "inference_seconds": self.inference_seconds,
+            "cache_key": self.cache_key, "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_record(cls, rec: dict[str, Any]) -> "MappingArtifact":
+        return cls(
+            domain=rec["domain"], model=rec["model"], stage=rec["stage"],
+            source=rec["source"], complexity_class=rec["complexity_class"],
+            report=validate.ValidationReport(**rec["report"]),
+            inference_joules=rec["inference_joules"],
+            inference_seconds=rec["inference_seconds"],
+            cache_key=rec.get("cache_key"),
+            created_unix=rec.get("created_unix", 0.0),
+        )
+
+
+def resolve_spec(spec) -> tuple[str, str | None]:
+    """(domain, logic|None) from a str | Domain | MapEntry | MappingArtifact.
+
+    Artifacts must be deployable (100% ordered) — this is the integration
+    gate of the paper's Phase 4.  MapEntry/artifact specs carry their logic
+    class so consumers can prefer a logic-specific tier when one exists."""
+    if isinstance(spec, str):
+        return spec, None
+    if isinstance(spec, MappingArtifact):
+        spec.registered_entry()  # raises if not deployable
+        return spec.domain, spec.logic
+    domain = getattr(spec, "domain", None)
+    if isinstance(domain, str):  # MapEntry
+        return domain, getattr(spec, "logic", None)
+    name = getattr(spec, "name", None)
+    if isinstance(name, str):    # Domain
+        return name, None
+    raise TypeError(f"cannot resolve a domain from {spec!r}")
+
+
+def resolve_domain(spec) -> str:
+    return resolve_spec(spec)[0]
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed derivation cache
+# ---------------------------------------------------------------------------
+
+
+def cache_key(domain: str, model: str, stage: int, prompt: str,
+              **extra: Any) -> str:
+    """Content address of one derivation cell."""
+    payload = {
+        "domain": domain, "model": model, "stage": stage,
+        "prompt_sha256": hashlib.sha256(prompt.encode()).hexdigest(),
+        **extra,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class ArtifactCache:
+    """Content-addressed on-disk store of derivation records.
+
+    Keys come from :func:`cache_key`; values are JSON records (see
+    ``pipeline.py`` for the record schema).  All I/O degrades gracefully:
+    a read-only or corrupt cache behaves like a miss."""
+
+    def __init__(self, root: str | Path | None = None):
+        if root is None:
+            root = os.environ.get("REPRO_ARTIFACT_CACHE") or (
+                Path.home() / ".cache" / "repro_thread_maps")
+        self.root = Path(root)
+        self.hits = 0
+        self.misses = 0
+
+    def path(self, key: str) -> Path:
+        return self.root / f"{key}.json"
+
+    def load(self, key: str) -> dict[str, Any] | None:
+        try:
+            rec = json.loads(self.path(key).read_text())
+        except (OSError, ValueError):
+            self.misses += 1
+            return None
+        if rec.get("schema") != SCHEMA_VERSION:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return rec
+
+    def store(self, key: str, record: dict[str, Any]) -> Path | None:
+        record = {"schema": SCHEMA_VERSION, "key": key, **record}
+        path = self.path(key)
+        tmp = None
+        published = False
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f, indent=1)
+            os.replace(tmp, path)  # atomic publish
+            published = True
+        except OSError:
+            return None
+        finally:
+            if tmp is not None and not published:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+        return path
+
+    def __contains__(self, key: str) -> bool:
+        return self.path(key).exists()
+
+    def __len__(self) -> int:
+        try:
+            return sum(1 for _ in self.root.glob("*.json"))
+        except OSError:
+            return 0
+
+    def clear(self) -> int:
+        n = 0
+        for p in self.root.glob("*.json"):
+            try:
+                p.unlink()
+                n += 1
+            except OSError:
+                pass
+        return n
+
+
+_DEFAULT_CACHES: dict[str, ArtifactCache] = {}
+
+
+def default_cache() -> ArtifactCache | None:
+    """Process-default cache honoring $REPRO_ARTIFACT_CACHE (opt-out with
+    "off"/"0"/"none").  One instance per resolved root, so hit/miss counters
+    accumulate across calls."""
+    env = os.environ.get("REPRO_ARTIFACT_CACHE", "")
+    if env.strip().lower() in ("off", "0", "none", "disabled"):
+        return None
+    root = env or str(Path.home() / ".cache" / "repro_thread_maps")
+    if root not in _DEFAULT_CACHES:
+        _DEFAULT_CACHES[root] = ArtifactCache(root)
+    return _DEFAULT_CACHES[root]

@@ -401,6 +401,23 @@ MODEL_SPECS = {
 }
 
 
+_REPLAY_BANK_FINGERPRINT: list[str] = []
+
+
+def replay_bank_fingerprint() -> str:
+    """Content hash of the mock replay bank; folded into artifact-cache keys
+    so edits to the measured tables / code templates invalidate cached
+    derivations instead of silently replaying stale results."""
+    if not _REPLAY_BANK_FINGERPRINT:
+        payload = repr((pt.ACCURACY, pt.LOGIC_CLASS_OVERRIDES, CODE_TEMPLATES,
+                        _PERMUTED, _FAIL_2D_ROWMAJOR, _FAIL_3D_ROWMAJOR,
+                        _FAIL_WRONG_BASE_2D, _FAIL_WRONG_BASE_3D,
+                        _NONCOMPILING, MODEL_SPECS))
+        _REPLAY_BANK_FINGERPRINT.append(
+            hashlib.sha256(payload.encode()).hexdigest()[:16])
+    return _REPLAY_BANK_FINGERPRINT[0]
+
+
 class MockLLMBackend:
     """Deterministic replay of the paper's measured per-cell behaviour."""
 
@@ -409,6 +426,10 @@ class MockLLMBackend:
             raise ValueError(f"unknown model {model!r}; have {pt.MODELS}")
         self.name = model
         self.spec = MODEL_SPECS[model]
+
+    @property
+    def cache_fingerprint(self) -> str:
+        return replay_bank_fingerprint()
 
     def generate(self, prompt: str, *, meta: dict) -> LLMResponse:
         domain, stage = meta["domain"], meta["stage"]

@@ -1,0 +1,90 @@
+"""Ground-truth mapping functions lambda -> coordinates (Table I).
+
+Facade over the per-tier modules — ``dense`` (closed-form Table-I maps),
+``fractal`` (base-B digit engine + per-geometry plugins) and ``variants``
+(the Tables VIII/IX logic classes).  Importing this package registers every
+built-in map into the :mod:`repro.core.registry`; the dispatch helpers below
+(``np_map``/``jnp_map``) and the compatibility dicts (``SCALAR_MAPS``/
+``VARIANT_MAPS``) all resolve through that registry — no string-keyed
+if-chains remain.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maps.dense import (  # noqa: F401
+    jnp_map_pyramid3d, jnp_map_tri2d, map_pyramid3d, map_tri2d,
+    np_map_pyramid3d, np_map_tri2d, unmap_pyramid3d, unmap_tri2d,
+)
+from repro.core.maps.fractal import (  # noqa: F401
+    jnp_map_fractal, map_carpet2d, map_fractal, map_gasket2d, map_menger3d,
+    map_sierpinski3d, np_map_fractal, register_fractal_domain, unmap_fractal,
+)
+from repro.core.maps.variants import (  # noqa: F401
+    map_pyramid3d_binsearch, map_pyramid3d_cbrt_loop, map_pyramid3d_linear,
+    map_tri2d_approx_if, map_tri2d_binsearch, map_tri2d_sqrt_loop,
+)
+from repro.core.registry import REGISTRY
+
+# ---------------------------------------------------------------------------
+# Registry-driven dispatch (previously per-domain if-chains)
+# ---------------------------------------------------------------------------
+
+
+def np_map(domain_name: str, lams: np.ndarray) -> np.ndarray:
+    """Vectorized exact int64 ground-truth map for any registered domain."""
+    return REGISTRY.tier(domain_name, None, "numpy")(lams)
+
+
+def jnp_map(domain_name: str, lams: jnp.ndarray, ndigits: int = 13) -> jnp.ndarray:
+    """Traceable ground-truth map for any registered domain."""
+    return REGISTRY.tier(domain_name, None, "jnp")(lams, ndigits)
+
+
+def scalar_map(domain_name: str, logic: str | None = None):
+    """Exact scalar map for (domain, logic); logic=None -> ground truth."""
+    return REGISTRY.tier(domain_name, logic, "scalar")
+
+
+def unmap(domain_name: str, logic: str | None = None):
+    """Exact inverse coords -> lambda for a registered domain."""
+    return REGISTRY.tier(domain_name, logic, "unmap")
+
+
+# ---------------------------------------------------------------------------
+# Backward-compatible views of the registry
+# ---------------------------------------------------------------------------
+
+class _RegistryView(Mapping):
+    """Live read-only dict view over the registry's scalar tiers — maps
+    registered after import (plugins, derived artifacts) appear too."""
+
+    def __init__(self, build):
+        self._build = build
+
+    def __getitem__(self, key):
+        return self._build()[key]
+
+    def __iter__(self):
+        return iter(self._build())
+
+    def __len__(self):
+        return len(self._build())
+
+
+#: domain -> ground-truth scalar callable.
+SCALAR_MAPS = _RegistryView(lambda: {
+    entry.domain: entry.scalar
+    for entry in REGISTRY.snapshot().values()
+    if entry.ground_truth and "scalar" in entry.tiers
+})
+
+#: (domain, logic-class) -> scalar callable; "analytical" is the paper map.
+VARIANT_MAPS = _RegistryView(lambda: {
+    key: entry.tiers["scalar"]
+    for key, entry in sorted(REGISTRY.snapshot().items())
+    if "scalar" in entry.tiers
+})

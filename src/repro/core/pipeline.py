@@ -4,18 +4,32 @@
   2. Symbolic Inference    — backend.generate over the Appendix-A prompt,
   3. Algorithmic Synthesis — code extraction + sandboxed compile + rule check,
   4. Integration           — validated map handed to the deployment layer
-                             (Pallas index_map / block-space kernels).
+                             (Pallas index_map / block-space kernels) as a
+                             MappingArtifact.
+
+Derivation is a one-time upfront investment: every cell is content-addressed
+(domain + model + stage + prompt + validation spec) into the artifact cache,
+so a repeated ``derive_mapping`` call is served from disk with zero backend
+``generate`` calls and zero re-validation.  ``run_grid`` sweeps whole
+(domain x model x stage) grids through the same cache.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
 from repro.core import complexity, energy, synthesis, validate
+from repro.core.artifact import (
+    ArtifactCache, MappingArtifact, cache_key, default_cache, logic_for,
+)
 from repro.core.backends import LLMBackend, LLMResponse, build_prompt
-from repro.core.domains import Domain
+from repro.core.domains import DOMAINS, Domain
+
+_USE_DEFAULT_CACHE = object()  # sentinel: "resolve default_cache() at call"
 
 
 @dataclasses.dataclass
@@ -30,7 +44,11 @@ class DerivationResult:
     complexity_class: str | None
     wall_seconds: float
     inference_joules: float
+    domainobj: Domain
     error: str | None = None
+    cache_hit: bool = False
+    cache_key: str | None = None
+    created_unix: float = dataclasses.field(default_factory=time.time)
 
     @property
     def perfect(self) -> bool:
@@ -40,21 +58,73 @@ class DerivationResult:
     def silver(self) -> bool:  # geometry right, order permuted
         return self.compiled and not self.perfect and self.report.any_order >= 0.999
 
+    @property
+    def logic(self) -> str:
+        """Calibrated logic class implied by the measured complexity."""
+        return logic_for(self.complexity_class, self.domainobj)
+
+    @functools.cached_property
+    def artifact(self) -> MappingArtifact | None:
+        """The persistent product of this derivation (None if it failed).
+        Memoized so repeated access shares one instance (and its compiled
+        scalar callable)."""
+        if not self.compiled or self.source is None:
+            return None
+        return MappingArtifact(
+            domain=self.domain, model=self.model, stage=self.stage,
+            source=self.source, complexity_class=self.complexity_class,
+            report=self.report, inference_joules=self.inference_joules,
+            inference_seconds=self.wall_seconds, cache_key=self.cache_key,
+            created_unix=self.created_unix,
+        )
+
     def amortization(self, n_points: int = 500_000_000):
         if not self.compiled or self.complexity_class is None:
             return None
-        # map complexity class back onto the calibrated logic table
-        logic = {
-            "O(1)": "analytical",
-            "O(log N)": "binsearch" if self.domainobj.kind == "dense" else "bitwise",
-            "O(N^1/3)": "linear",
-            "O(N^1/2)": "linear",
-            "O(N)": "linear",
-        }[self.complexity_class]
-        return energy.amortization(self.domainobj, logic, self.inference_joules,
-                                   n_points)
+        return energy.amortization(self.domainobj, self.logic,
+                                   self.inference_joules, n_points)
 
-    domainobj: Domain = None  # set by derive_mapping
+
+# ---------------------------------------------------------------------------
+# Cache record <-> result
+# ---------------------------------------------------------------------------
+
+
+def _record_from_result(res: DerivationResult) -> dict:
+    r = res.response
+    return {
+        "domain": res.domain, "model": res.model, "stage": res.stage,
+        "compiled": res.compiled, "source": res.source, "error": res.error,
+        "complexity_class": res.complexity_class,
+        "wall_seconds": res.wall_seconds,
+        "report": dataclasses.asdict(res.report),
+        "response": {
+            "text": r.text, "model": r.model, "tokens_in": r.tokens_in,
+            "tokens_out": r.tokens_out, "seconds": r.seconds,
+            "joules": r.joules,
+        },
+        "created_unix": res.created_unix,
+    }
+
+
+def _result_from_record(rec: dict, domain: Domain, key: str) -> DerivationResult:
+    return DerivationResult(
+        domain=rec["domain"], model=rec["model"], stage=rec["stage"],
+        response=LLMResponse(**rec["response"]),
+        compiled=rec["compiled"], source=rec["source"],
+        report=validate.ValidationReport(**rec["report"]),
+        complexity_class=rec["complexity_class"],
+        wall_seconds=rec["wall_seconds"],
+        inference_joules=rec["response"]["joules"],
+        domainobj=domain, error=rec["error"],
+        cache_hit=True, cache_key=key,
+        created_unix=rec.get("created_unix", 0.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
 
 
 def derive_mapping(
@@ -62,13 +132,32 @@ def derive_mapping(
     backend: LLMBackend,
     stage: int = 100,
     n_validate: int = 1_000_000,
-    gt: np.ndarray | None = None,
+    gt: np.ndarray | Callable[[], np.ndarray] | None = None,
     sample_every: int = 1,
+    cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
 ) -> DerivationResult:
-    """Run the full pipeline for one (domain, model, stage) cell."""
+    """Run the full pipeline for one (domain, model, stage) cell.
+
+    ``cache`` defaults to the process cache (see ``artifact.default_cache``);
+    pass ``cache=None`` to force a live derivation.  ``gt`` may be the
+    ground-truth array or a zero-arg callable producing it — the callable is
+    only invoked on a cache miss, so cached sweeps never enumerate."""
+    if cache is _USE_DEFAULT_CACHE:
+        cache = default_cache()
     t0 = time.monotonic()
-    # Phase 1+2: sample context, build prompt, call the model
+    # Phase 1+2: sample context, build prompt — the prompt is part of the
+    # content address, so a prompt-template change invalidates the cache.
     prompt = build_prompt(domain, stage)
+    # backends may expose a content fingerprint (e.g. the mock replay bank)
+    # so behavior edits invalidate their cached cells
+    key = cache_key(domain.name, backend.name, stage, prompt,
+                    n_validate=n_validate, sample_every=sample_every,
+                    backend_fingerprint=getattr(backend, "cache_fingerprint",
+                                                None))
+    if cache is not None:
+        rec = cache.load(key)
+        if rec is not None:
+            return _result_from_record(rec, domain, key)
     resp = backend.generate(prompt, meta={"domain": domain.name, "stage": stage})
     # Phase 3: synthesis
     try:
@@ -79,11 +168,14 @@ def derive_mapping(
             domain=domain.name, model=backend.name, stage=stage, response=resp,
             compiled=False, source=None, report=rep, complexity_class=None,
             wall_seconds=time.monotonic() - t0, inference_joules=resp.joules,
-            error=str(e),
+            domainobj=domain, error=str(e), cache_key=key,
         )
-        res.domainobj = domain
+        if cache is not None:
+            cache.store(key, _record_from_result(res))
         return res
     # Phase 3b: validation against ground truth (the paper's 10^6-point check)
+    if callable(gt):
+        gt = gt()
     rep = validate.validate_scalar_fn(
         synth.fn, domain, n_points=n_validate, gt=gt, sample_every=sample_every
     )
@@ -92,6 +184,61 @@ def derive_mapping(
         domain=domain.name, model=backend.name, stage=stage, response=resp,
         compiled=True, source=synth.source, report=rep, complexity_class=cls,
         wall_seconds=time.monotonic() - t0, inference_joules=resp.joules,
+        domainobj=domain, cache_key=key,
     )
-    res.domainobj = domain
+    if cache is not None:
+        cache.store(key, _record_from_result(res))
     return res
+
+
+# ---------------------------------------------------------------------------
+# Grid orchestrator
+# ---------------------------------------------------------------------------
+
+
+def run_grid(
+    domains: Iterable[str] | None = None,
+    models: Iterable[str] | None = None,
+    stages: Sequence[int] | None = None,
+    *,
+    backend_factory: Callable[[str], LLMBackend] | None = None,
+    n_validate: int = 100_000,
+    sample_every: int = 50,
+    cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
+    progress: Callable[[DerivationResult], None] | None = None,
+) -> dict[tuple[str, str, int], DerivationResult]:
+    """Sweep every (domain x model x stage) cell through the artifact cache.
+
+    Ground truth is enumerated once per domain and shared across the sweep;
+    cells already in the cache cost one JSON read.  Returns a dict keyed
+    (domain, model, stage)."""
+    from repro.core import paper_tables as pt
+    from repro.core.backends import MockLLMBackend
+
+    domains = list(domains) if domains is not None else sorted(DOMAINS)
+    models = list(models) if models is not None else list(pt.MODELS)
+    stages = list(stages) if stages is not None else list(pt.STAGES)
+    backend_factory = backend_factory or MockLLMBackend
+    if cache is _USE_DEFAULT_CACHE:
+        cache = default_cache()
+
+    out: dict[tuple[str, str, int], DerivationResult] = {}
+    for dom_name in domains:
+        dom = DOMAINS[dom_name] if isinstance(dom_name, str) else dom_name
+        gt_memo: dict[str, np.ndarray] = {}
+
+        def lazy_gt(d=dom):  # enumerated once per domain, only on a miss
+            if "gt" not in gt_memo:
+                gt_memo["gt"] = d.enumerate_points(n_validate)
+            return gt_memo["gt"]
+
+        for model in models:
+            backend = backend_factory(model)
+            for stage in stages:
+                res = derive_mapping(
+                    dom, backend, stage, n_validate=n_validate, gt=lazy_gt,
+                    sample_every=sample_every, cache=cache)
+                out[(dom.name, model, stage)] = res
+                if progress is not None:
+                    progress(res)
+    return out

@@ -3,16 +3,18 @@
 TPU adaptation of the paper's deployment kernels (Sec. V.C): TPUs have no
 global atomics, so the representative memory-bound workload is the map
 evaluation itself — each grid step turns a VMEM block of linear indices
-λ into domain coordinates using the Table-I logic, fully vectorized on the
-VPU (integer ALU ops only, zero MXU traffic):
+λ into domain coordinates, fully vectorized on the VPU (integer ALU ops
+only, zero MXU traffic):
 
   * ``map_kernel``        — mapped strategy: grid of exactly ceil(N/bn) steps.
   * ``membership_kernel`` — bounding-box strategy: grid over the *box*
     (ceil(prod(extent)/bn) steps), evaluating the discard `if` per element.
 
-All digit→vector tables are evaluated arithmetically (no gathers): e.g. the
-Menger digit d maps to the row-major cell index by skipping the 7 void cells
-with an ascending `cell += (cell >= void)` ladder.
+The per-domain geometry (Table-I logic) is resolved through the MapRegistry's
+``pallas``/``membership`` tiers (see ``geometry.py``); builders accept a
+domain name, a ``Domain``, a registry ``MapEntry`` or a validated
+``MappingArtifact`` — the artifact path is the paper's Phase-4 integration:
+the validation report licenses deploying the registered exact kernel.
 
 Output layout is (8, N) int32 — row r holds coordinate axis r (rows dim..7
 are zero padding to match the TPU's (8, 128) int32 sublane tiling).
@@ -25,136 +27,40 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.domains import MENGER_VOIDS
-
-_MENGER_VOID_CELLS = sorted(9 * x + 3 * y + z for x, y, z in MENGER_VOIDS)
-
-
-def _vec_isqrt(v):
-    """Exact vectorized isqrt for int32 v (fp32 seed + correction ladder)."""
-    r = jnp.sqrt(v.astype(jnp.float32)).astype(jnp.int32)
-    for _ in range(3):
-        r = jnp.where((r + 1) * (r + 1) <= v, r + 1, r)
-        r = jnp.where(r * r > v, r - 1, r)
-    return jnp.maximum(r, 0)
+from repro.core.artifact import resolve_spec
+from repro.core.registry import REGISTRY
+from repro.kernels.domain_map import geometry  # noqa: F401 — registers tiers
 
 
-def _tri_xy(lam):
-    x = (_vec_isqrt(8 * lam + 1) - 1) // 2
-    return x, lam - x * (x + 1) // 2
+def _geometry_tier(spec, tier_name: str):
+    """(domain, tier callable) for a map spec.
+
+    A spec carrying a logic class (MapEntry, artifact) uses that entry's
+    in-kernel tier when it registered one; otherwise it falls back to the
+    domain's ground-truth geometry — the in-kernel map is per-domain
+    geometry, and variant logic classes only differ in scalar cost model."""
+    domain_name, logic = resolve_spec(spec)
+    if logic is not None:
+        try:
+            entry = REGISTRY.resolve(domain_name, logic)
+        except KeyError:  # e.g. an artifact's inferred cost class has no entry
+            entry = None
+        if entry is not None and tier_name in entry.tiers:
+            return domain_name, entry.tiers[tier_name]
+    return domain_name, REGISTRY.tier(domain_name, None, tier_name)
 
 
-def _tet_z(lam):
-    z = jnp.cbrt(6.0 * lam.astype(jnp.float32)).astype(jnp.int32)
-    for _ in range(3):
-        z = jnp.where((z + 1) * (z + 2) * (z + 3) // 6 <= lam, z + 1, z)
-        z = jnp.where((z > 0) & (z * (z + 1) * (z + 2) // 6 > lam), z - 1, z)
-    return jnp.maximum(z, 0)
-
-
-def _coords_for(domain_name: str, lam, ndigits: int):
-    """Vectorized Table-I map; lam is an int32 array, returns list of axes."""
-    if domain_name == "tri2d":
-        x, y = _tri_xy(lam)
-        return [x, y]
-    if domain_name == "pyramid3d":
-        z = _tet_z(lam)
-        rem = lam - z * (z + 1) * (z + 2) // 6
-        x, y = _tri_xy(rem)
-        return [x, y, z]
-    if domain_name == "gasket2d":
-        x = jnp.zeros_like(lam)
-        y = jnp.zeros_like(lam)
-        m, s = lam, 1
-        for _ in range(ndigits):
-            d = m % 3
-            x += jnp.where(d == 1, s, 0)
-            y += jnp.where(d == 2, s, 0)
-            m, s = m // 3, s * 2
-        return [x, y]
-    if domain_name == "carpet2d":
-        x = jnp.zeros_like(lam)
-        y = jnp.zeros_like(lam)
-        m, s = lam, 1
-        for _ in range(ndigits):
-            d = m % 8
-            cell = d + (d >= 4).astype(jnp.int32)   # skip the (1,1) void
-            x += (cell // 3) * s
-            y += (cell % 3) * s
-            m, s = m // 8, s * 3
-        return [x, y]
-    if domain_name == "sierpinski3d":
-        x = jnp.zeros_like(lam)
-        y = jnp.zeros_like(lam)
-        z = jnp.zeros_like(lam)
-        m, s = lam, 1
-        for _ in range(ndigits):
-            d = m % 4
-            x += jnp.where(d == 1, s, 0)
-            y += jnp.where(d == 2, s, 0)
-            z += jnp.where(d == 3, s, 0)
-            m, s = m // 4, s * 2
-        return [x, y, z]
-    if domain_name == "menger3d":
-        x = jnp.zeros_like(lam)
-        y = jnp.zeros_like(lam)
-        z = jnp.zeros_like(lam)
-        m, s = lam, 1
-        for _ in range(ndigits):
-            cell = m % 20
-            for void in _MENGER_VOID_CELLS:   # ascending skip ladder
-                cell += (cell >= void).astype(jnp.int32)
-            x += (cell // 9) * s
-            y += ((cell // 3) % 3) * s
-            z += (cell % 3) * s
-            m, s = m // 20, s * 3
-        return [x, y, z]
-    raise ValueError(domain_name)
-
-
-def _membership(domain_name: str, axes, ndigits: int):
-    """Vectorized `contains` — the BB kernel's discard condition."""
-    if domain_name == "tri2d":
-        x, y = axes
-        return y <= x
-    if domain_name == "pyramid3d":
-        x, y, z = axes
-        return (y <= x) & (x <= z)
-    if domain_name == "gasket2d":
-        x, y = axes
-        return (x & y) == 0
-    if domain_name == "sierpinski3d":
-        x, y, z = axes
-        return ((x & y) | (x & z) | (y & z)) == 0
-    if domain_name == "carpet2d":
-        x, y = axes
-        ok = jnp.ones(x.shape, dtype=bool)
-        for _ in range(ndigits):
-            ok &= ~((x % 3 == 1) & (y % 3 == 1))
-            x, y = x // 3, y // 3
-        return ok
-    if domain_name == "menger3d":
-        x, y, z = axes
-        ok = jnp.ones(x.shape, dtype=bool)
-        for _ in range(ndigits):
-            ones = ((x % 3 == 1).astype(jnp.int32) + (y % 3 == 1) + (z % 3 == 1))
-            ok &= ones < 2
-            x, y, z = x // 3, y // 3, z // 3
-        return ok
-    raise ValueError(domain_name)
-
-
-def _map_kernel(o_ref, *, domain_name: str, block_n: int, ndigits: int):
+def _map_kernel(o_ref, *, coords_fn, block_n: int, ndigits: int):
     pid = pl.program_id(0)
     lam = pid * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
-    axes = _coords_for(domain_name, lam, ndigits)
+    axes = coords_fn(lam, ndigits)
     out = jnp.concatenate(
         axes + [jnp.zeros_like(lam)] * (8 - len(axes)), axis=0
     )  # (8, bn)
     o_ref[...] = out
 
 
-def _membership_kernel(o_ref, *, domain_name: str, block_n: int,
+def _membership_kernel(o_ref, *, membership_fn, block_n: int,
                        extent: tuple[int, ...], ndigits: int):
     pid = pl.program_id(0)
     lam = pid * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
@@ -164,16 +70,17 @@ def _membership_kernel(o_ref, *, domain_name: str, block_n: int,
     else:
         h, w = extent[1], extent[2]
         axes = [lam // (h * w), (lam // w) % h, lam % w]
-    ok = _membership(domain_name, axes, ndigits)
+    ok = membership_fn(axes, ndigits)
     o_ref[...] = ok.astype(jnp.int32)
 
 
-def build_map_call(domain_name: str, n_points: int, block_n: int = 1024,
+def build_map_call(spec, n_points: int, block_n: int = 1024,
                    ndigits: int = 13, interpret: bool = False):
     assert n_points % block_n == 0, "pad N to a block multiple"
+    _, coords_fn = _geometry_tier(spec, "pallas")
     grid = (n_points // block_n,)
     kernel = functools.partial(
-        _map_kernel, domain_name=domain_name, block_n=block_n, ndigits=ndigits
+        _map_kernel, coords_fn=coords_fn, block_n=block_n, ndigits=ndigits
     )
     return pl.pallas_call(
         kernel,
@@ -185,7 +92,7 @@ def build_map_call(domain_name: str, n_points: int, block_n: int = 1024,
     )
 
 
-def build_membership_call(domain_name: str, extent: tuple[int, ...],
+def build_membership_call(spec, extent: tuple[int, ...],
                           block_n: int = 1024, ndigits: int = 13,
                           interpret: bool = False,
                           padded_total: int | None = None):
@@ -194,9 +101,10 @@ def build_membership_call(domain_name: str, extent: tuple[int, ...],
         total *= e
     total = padded_total if padded_total is not None else total
     assert total % block_n == 0, "pad the box to a block multiple"
+    _, membership_fn = _geometry_tier(spec, "membership")
     grid = (total // block_n,)
     kernel = functools.partial(
-        _membership_kernel, domain_name=domain_name, block_n=block_n,
+        _membership_kernel, membership_fn=membership_fn, block_n=block_n,
         extent=extent, ndigits=ndigits,
     )
     return pl.pallas_call(

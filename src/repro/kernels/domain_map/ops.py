@@ -1,8 +1,14 @@
-"""Jit'd wrappers for the domain-map kernels + block-waste accounting."""
+"""Jit'd wrappers for the domain-map kernels + block-waste accounting.
+
+Every entry point takes a *map spec* — a domain name, a ``Domain``, a
+registry ``MapEntry`` or a validated ``MappingArtifact`` — and resolves the
+geometry through the MapRegistry.
+"""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.artifact import resolve_domain
 from repro.core.domains import get_domain
 from repro.kernels.domain_map.kernel import build_map_call, build_membership_call
 
@@ -11,34 +17,34 @@ def _pad_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def map_coordinates(domain_name: str, n_points: int, block_n: int = 1024,
+def map_coordinates(spec, n_points: int, block_n: int = 1024,
                     interpret: bool = False) -> np.ndarray:
     """First n_points coordinates via the mapped-grid Pallas kernel, (N, dim)."""
-    d = get_domain(domain_name)
+    d = get_domain(resolve_domain(spec))
     padded = _pad_to(n_points, block_n)
     ndigits = max(d.level_for_points(padded), 1) if d.kind == "fractal" else 13
-    call = build_map_call(d.name, padded, block_n, ndigits, interpret)
+    call = build_map_call(spec, padded, block_n, ndigits, interpret)
     out = np.asarray(call())            # (8, padded)
     return out[: d.dim, :n_points].T    # (N, dim)
 
 
-def bb_membership(domain_name: str, extent: tuple[int, ...],
+def bb_membership(spec, extent: tuple[int, ...],
                   block_n: int = 1024, interpret: bool = False) -> np.ndarray:
     """Row-major membership mask over the bounding box via the BB kernel."""
-    d = get_domain(domain_name)
+    d = get_domain(resolve_domain(spec))
     total = int(np.prod(extent))
     padded = _pad_to(total, block_n)
     # membership of the box needs digits covering the box extent
     ndigits = (max(d.level_for_points(total), 1) + 1) if d.kind == "fractal" else 13
-    call = build_membership_call(d.name, extent, block_n, ndigits, interpret,
+    call = build_membership_call(spec, extent, block_n, ndigits, interpret,
                                  padded_total=padded)
     out = np.asarray(call())[0]
     return out[:total]
 
 
-def block_counts(domain_name: str, n_points: int, block_n: int = 256) -> dict:
+def block_counts(spec, n_points: int, block_n: int = 256) -> dict:
     """Grid-step accounting for mapped vs bounding-box strategies."""
-    d = get_domain(domain_name)
+    d = get_domain(resolve_domain(spec))
     mapped_steps = -(-n_points // block_n)
     ext = d.bounding_box_extent(n_points)
     bb_steps = -(-int(np.prod(ext)) // block_n)

@@ -3,18 +3,19 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.artifact import resolve_domain
 from repro.core.domains import get_domain
 from repro.core.maps import np_map
 
 
-def map_coordinates_ref(domain_name: str, n_points: int) -> np.ndarray:
+def map_coordinates_ref(spec, n_points: int) -> np.ndarray:
     """(N, dim) coordinates of the first N domain points (mapped strategy)."""
-    return np_map(domain_name, np.arange(n_points, dtype=np.int64))
+    return np_map(resolve_domain(spec), np.arange(n_points, dtype=np.int64))
 
 
-def bb_membership_ref(domain_name: str, extent: tuple[int, ...]) -> np.ndarray:
+def bb_membership_ref(spec, extent: tuple[int, ...]) -> np.ndarray:
     """Row-major membership mask over the bounding box (BB strategy)."""
-    d = get_domain(domain_name)
+    d = get_domain(resolve_domain(spec))
     lam = np.arange(int(np.prod(extent)), dtype=np.int64)
     if d.dim == 2:
         w = extent[1]

@@ -179,3 +179,37 @@ def _state_bytes(cfg: ModelConfig, b: int) -> float:
         return 4.0 * b * h * hd * hd * cfg.n_layers
     h = cfg.mamba_heads
     return 4.0 * b * h * (cfg.mamba_d_inner // h) * cfg.ssm_state * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Artifact-driven deployment analytics (block-space kernels, Sec. V.C)
+# ---------------------------------------------------------------------------
+
+
+def artifact_deployment_analytics(artifact, n_points: int = 500_000_000,
+                                  block: int = 256) -> dict:
+    """Deployment economics of a validated ``MappingArtifact``: mapped vs
+    bounding-box block accounting, calibrated A100 cost model, and the
+    amortization of the artifact's one-time inference energy."""
+    from repro.core import energy
+    from repro.core.domains import get_domain
+
+    d = get_domain(artifact.domain)
+    mp = energy.estimate_mapped(d, artifact.logic, n_points, block)
+    bb = energy.estimate_bounding_box(d, n_points, block)
+    am = energy.amortization(d, artifact.logic, artifact.inference_joules,
+                             n_points)
+    return {
+        "domain": artifact.domain, "model": artifact.model,
+        "stage": artifact.stage, "logic": artifact.logic,
+        "complexity_class": artifact.complexity_class,
+        "report_digest": artifact.report_digest,
+        "n_points": n_points,
+        "mapped_time_ms": mp.time_ms, "mapped_energy_j": mp.energy_j,
+        "mapped_blocks": mp.total_blocks,
+        "bb_time_ms": bb.time_ms, "bb_energy_j": bb.energy_j,
+        "bb_blocks": bb.total_blocks, "bb_wasted_blocks": bb.wasted_blocks,
+        "speedup": am.speedup, "energy_reduction": am.energy_reduction,
+        "inference_joules": artifact.inference_joules,
+        "runs_to_break_even": am.runs_to_break_even,
+    }

@@ -153,6 +153,63 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
+def run_domain_map_cell(artifact, n_points: int = 65_536,
+                        block_n: int = 1024, interpret: bool = True,
+                        verbose: bool = True) -> dict:
+    """Deploy a validated ``MappingArtifact`` through the mapped-grid Pallas
+    kernel and verify the compiled coordinates against the artifact's own
+    validated scalar map — the Phase-4 integration proof for one artifact."""
+    import numpy as np
+
+    from repro.kernels.domain_map.ops import block_counts, map_coordinates
+
+    t0 = time.time()
+    coords = map_coordinates(artifact, n_points, block_n=block_n,
+                             interpret=interpret)
+    t_run = time.time() - t0
+    sample = np.linspace(0, n_points - 1, 256, dtype=np.int64)
+    scalar = artifact.scalar_fn()
+    ok = all(tuple(coords[i]) == tuple(scalar(int(i))) for i in sample)
+    record = {
+        "kind": "domain_map", "status": "ok" if ok else "mismatch",
+        "domain": artifact.domain, "model": artifact.model,
+        "stage": artifact.stage, "logic": artifact.logic,
+        "report_digest": artifact.report_digest,
+        "n_points": n_points, "block_n": block_n,
+        "kernel_s": round(t_run, 3),
+        "blocks": block_counts(artifact, n_points, block_n),
+        "analytic": analytic.artifact_deployment_analytics(artifact),
+    }
+    if verbose:
+        a = record["analytic"]
+        print(f"[dryrun] domain-map {artifact.domain} x {artifact.model} "
+              f"s{artifact.stage}: {record['status']} "
+              f"(kernel {t_run:.2f}s, projected speedup {a['speedup']:.0f}x, "
+              f"energy {a['energy_reduction']:.0f}x)", flush=True)
+    return record
+
+
+def _run_domain_map(domain_name: str, model: str, out_dir: str) -> None:
+    from repro.core.backends import MockLLMBackend
+    from repro.core.domains import get_domain
+    from repro.core.pipeline import derive_mapping
+
+    res = derive_mapping(get_domain(domain_name), MockLLMBackend(model),
+                         stage=100, n_validate=50_000, sample_every=10)
+    art = res.artifact
+    if art is None or not art.deployable:
+        raise SystemExit(
+            f"derivation not deployable: {domain_name} x {model} "
+            f"(ordered {res.report.ordered_pct:.2f}%, error={res.error!r})")
+    rec = run_domain_map_cell(art)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"domain_map__{domain_name}__{model}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] != "ok":
+        raise SystemExit(f"domain-map dry-run MISMATCH: {path}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", choices=ARCH_IDS)
@@ -163,7 +220,17 @@ def main() -> None:
     p.add_argument("--skip-existing", action="store_true")
     p.add_argument("--profile", choices=("baseline", "optimized"),
                    default="baseline")
+    p.add_argument("--domain-map", metavar="DOMAIN",
+                   help="derive + deploy one domain's MappingArtifact "
+                        "through the Pallas mapped kernel instead of an "
+                        "(arch x shape) cell")
+    p.add_argument("--map-model", default="OSS:120b",
+                   help="backend model for --domain-map")
     args = p.parse_args()
+
+    if args.domain_map:
+        _run_domain_map(args.domain_map, args.map_model, args.out)
+        return
 
     cells: list[tuple[str, str]] = []
     if args.all:

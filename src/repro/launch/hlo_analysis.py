@@ -45,6 +45,38 @@ _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 
 
+def _split_top_level(s: str) -> list[str]:
+    """Split on commas not nested in []/{}/() — newer HLO text prints operand
+    shapes inline (``dot(f32[32,128]{1,0} %Arg_0.1, ...)``)."""
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _operand_parts(rest: str) -> list[str]:
+    m = _OPERANDS.search(rest)
+    if not m:
+        return []
+    return [p.strip() for p in _split_top_level(m.group(1)) if p.strip()]
+
+
+def _operand_name(part: str) -> str:
+    return part.split(" ")[-1].lstrip("%")
+
+
 def _shape_elems_bytes(text: str) -> tuple[int, int]:
     """(elements, bytes) summed over all typed shape tokens in `text`."""
     elems = 0
@@ -130,16 +162,17 @@ def _trip_count(cond: Computation) -> int:
 def _dot_flops(ins: Instr, shapes: dict) -> float:
     """2 * prod(result) * prod(contracting dims of lhs)."""
     res_elems, _ = _shape_elems_bytes(ins.result_text)
-    ops = re.search(r"\(([^)]*)\)", ins.rest)
-    lhs_name = None
-    if ops:
-        parts = [p.strip().lstrip("%") for p in ops.group(1).split(",")]
-        if parts:
-            lhs_name = parts[0].split(" ")[-1].lstrip("%")
+    parts = _operand_parts(ins.rest)
+    # lhs shape: inline in the operand text (newer HLO) or via name lookup
+    lhs_shape_text = ""
+    if parts:
+        lhs_shape_text = parts[0]
+        if not _SHAPE_TOKEN.search(lhs_shape_text):
+            lhs_shape_text = shapes.get(_operand_name(parts[0]), "")
     k = 1
     mc = _CONTRACT.search(ins.rest)
-    if mc and lhs_name and lhs_name in shapes:
-        dims_txt = _SHAPE_TOKEN.search(shapes[lhs_name])
+    if mc and lhs_shape_text:
+        dims_txt = _SHAPE_TOKEN.search(lhs_shape_text)
         if dims_txt:
             lhs_dims = [int(d) for d in dims_txt.group(2).split(",") if d]
             for ci in mc.group(1).split(","):
@@ -152,14 +185,12 @@ def _dot_flops(ins: Instr, shapes: dict) -> float:
 
 def _operand_bytes(ins: Instr, shapes: dict) -> int:
     total = 0
-    ops = re.search(r"\(([^)]*)\)", ins.rest)
-    if not ops:
-        return 0
-    for part in ops.group(1).split(","):
-        name = part.strip().lstrip("%").split(" ")[-1].lstrip("%")
-        if name in shapes:
-            _, b = _shape_elems_bytes(shapes[name])
-            total += b
+    for part in _operand_parts(ins.rest):
+        text = shapes.get(_operand_name(part), "")
+        if not text and _SHAPE_TOKEN.search(part):
+            text = part  # shape printed inline with the operand
+        _, b = _shape_elems_bytes(text)
+        total += b
     return total
 
 
@@ -211,13 +242,13 @@ def analyze(hlo: str, entry: str | None = None) -> dict:
                 hbm_bytes += rb * mult
             elif ins.op == "dynamic-update-slice":
                 # in-place: reads + writes only the update window (operand 1)
-                ops_m = re.search(r"\(([^)]*)\)", ins.rest)
+                parts = _operand_parts(ins.rest)
                 ub = 0
-                if ops_m:
-                    parts = [p.strip().lstrip("%").split(" ")[-1].lstrip("%")
-                             for p in ops_m.group(1).split(",")]
-                    if len(parts) > 1 and parts[1] in comp.shapes:
-                        _, ub = _shape_elems_bytes(comp.shapes[parts[1]])
+                if len(parts) > 1:
+                    text = comp.shapes.get(_operand_name(parts[1]), "")
+                    if not text and _SHAPE_TOKEN.search(parts[1]):
+                        text = parts[1]
+                    _, ub = _shape_elems_bytes(text)
                 hbm_bytes += 2 * ub * mult
             elif ins.op not in _SKIP_OPS:
                 _, rb = _shape_elems_bytes(ins.result_text)

@@ -1,0 +1,84 @@
+"""Deterministic fallback for the `hypothesis` property-testing API.
+
+The property tests prefer real hypothesis (declared in pyproject's test
+extra).  When it isn't installed, this shim keeps them running instead of
+skipping: ``st.integers`` strategies yield a fixed, deterministic sample set
+(boundaries + geometric spread + seeded randoms) and ``@given`` iterates the
+test body over them.  Only the tiny API surface the test-suite uses is
+implemented.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Integers:
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def examples(self, n: int = 25) -> list[int]:
+        lo, hi = self.lo, self.hi
+        if hi - lo + 1 <= n:            # small range: exhaustive
+            return list(range(lo, hi + 1))
+        vals = {lo + 1, hi - 1, (lo + hi) // 2}
+        v = max(lo, 1)
+        while v < hi:           # geometric spread across magnitudes
+            vals.add(v)
+            v *= 7
+        rng = random.Random(0xC0FFEE ^ lo ^ hi)
+        while len(vals) < n - 2:
+            vals.add(rng.randint(lo, hi))
+        # boundaries survive truncation unconditionally
+        interior = sorted(vals - {lo, hi})[: n - 2]
+        return sorted({lo, hi, *interior})
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**63 - 1) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+st = strategies
+
+
+def settings(**_kw):
+    """max_examples/deadline are hypothesis tuning knobs — no-op here."""
+    def decorate(fn):
+        return fn
+    return decorate
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per deterministic example of each strategy.
+
+    Positional strategies bind to the test's trailing parameters (matching
+    hypothesis); remaining parameters stay visible to pytest (fixtures /
+    parametrize)."""
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        bound = dict(zip(names[len(names) - len(arg_strategies):],
+                         arg_strategies))
+        bound.update(kw_strategies)
+        remaining = [n for n in names if n not in bound]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            base = dict(zip(remaining, args))
+            base.update(kwargs)
+            samples = {k: s.examples() for k, s in bound.items()}
+            rounds = max(len(v) for v in samples.values())
+            for i in range(rounds):
+                call = dict(base)
+                for k, vals in samples.items():
+                    call[k] = vals[i % len(vals)]
+                fn(**call)
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[n] for n in remaining])
+        return wrapper
+
+    return decorate

@@ -9,6 +9,16 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_artifact_cache(tmp_path_factory):
+    """Keep the artifact cache hermetic: never read/write the user's
+    ~/.cache during the test run unless the env var is set explicitly."""
+    if "REPRO_ARTIFACT_CACHE" not in os.environ:
+        os.environ["REPRO_ARTIFACT_CACHE"] = str(
+            tmp_path_factory.mktemp("artifact-cache"))
+    yield
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,258 @@
+"""MappingArtifact layer: registry resolution, variant logic coverage at
+large lambda, content-addressed derivation cache, and artifact-driven
+kernel deployment."""
+import numpy as np
+import pytest
+
+from repro.core import maps, validate
+from repro.core.artifact import ArtifactCache, MappingArtifact, cache_key
+from repro.core.backends import MockLLMBackend, build_prompt
+from repro.core.domains import DOMAINS
+from repro.core.pipeline import derive_mapping, run_grid
+from repro.core.registry import REGISTRY, MapRegistry, register_map
+
+ALL_DOMAINS = sorted(DOMAINS)
+LARGE_LAMBDAS = (10**6, 10**6 + 7, 10**7 + 13, 123_456_789, 10**9 + 1)
+
+
+class CountingBackend:
+    """MockLLMBackend wrapper that counts `generate` calls."""
+
+    def __init__(self, model: str):
+        self._inner = MockLLMBackend(model)
+        self.name = self._inner.name
+        self.calls = 0
+
+    def generate(self, prompt, *, meta):
+        self.calls += 1
+        return self._inner.generate(prompt, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_DOMAINS)
+def test_registry_ground_truth_has_all_tiers(name):
+    entry = REGISTRY.ground_truth(name)
+    assert entry.ground_truth
+    for tier in ("scalar", "unmap", "numpy", "jnp", "pallas", "membership"):
+        assert callable(REGISTRY.tier(name, None, tier)), (name, tier)
+
+
+def test_registry_unknown_domain_and_logic_raise():
+    with pytest.raises(KeyError):
+        REGISTRY.resolve("moebius9d")
+    with pytest.raises(KeyError):
+        REGISTRY.resolve("tri2d", "quantum_annealing")
+    with pytest.raises(KeyError):
+        REGISTRY.ground_truth("tri2d").tier("nope")
+
+
+def test_registry_duplicate_tier_rejected_without_overwrite():
+    reg = MapRegistry()
+    reg.register("toy", "analytical", tiers={"scalar": lambda n: (n,)})
+    with pytest.raises(ValueError):
+        reg.register("toy", "analytical", tiers={"scalar": lambda n: (n,)})
+    reg.register("toy", "analytical", tiers={"scalar": lambda n: (n, 0)},
+                 overwrite=True)
+    assert reg.resolve("toy", "analytical").scalar(3) == (3, 0)
+
+
+def test_one_file_plugin_registration():
+    """A new geometry is one register_map call on a fresh registry."""
+    reg = MapRegistry()
+
+    @register_map("diag1d", "analytical", tier="scalar",
+                  complexity_class="O(1)", ground_truth=True, registry=reg)
+    def map_diag(lam):
+        return (lam, lam)
+
+    entry = reg.ground_truth("diag1d")
+    assert entry.scalar(7) == (7, 7)
+    assert entry.complexity_class == "O(1)"
+    assert reg.logics("diag1d") == ["analytical"]
+    assert ("diag1d", "analytical") in reg
+
+
+def test_variant_maps_view_matches_registry():
+    """The compatibility dicts are views of the registry, not a fork."""
+    for (dom, logic), fn in maps.VARIANT_MAPS.items():
+        assert REGISTRY.resolve(dom, logic).scalar is fn
+    for dom, fn in maps.SCALAR_MAPS.items():
+        assert REGISTRY.ground_truth(dom).scalar is fn
+
+
+# ---------------------------------------------------------------------------
+# Variant logic classes at large lambda (>= 10^6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lam", LARGE_LAMBDAS)
+@pytest.mark.parametrize("dom_logic", sorted(maps.VARIANT_MAPS))
+def test_variant_agrees_with_analytical_large_lambda(dom_logic, lam):
+    dom, logic = dom_logic
+    variant = maps.VARIANT_MAPS[dom_logic]
+    assert tuple(variant(lam)) == tuple(maps.SCALAR_MAPS[dom](lam)), dom_logic
+
+
+@pytest.mark.parametrize("lam", LARGE_LAMBDAS)
+@pytest.mark.parametrize("dom_logic", sorted(maps.VARIANT_MAPS))
+def test_variant_roundtrips_through_unmap_large_lambda(dom_logic, lam):
+    dom, logic = dom_logic
+    coords = maps.VARIANT_MAPS[dom_logic](lam)
+    assert maps.unmap(dom)(*coords) == lam, dom_logic
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed artifact cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_inference_and_validation(tmp_path, monkeypatch):
+    """Second derivation of the same cell: zero generate calls, zero
+    re-validation — the amortization claim, literally."""
+    cache = ArtifactCache(tmp_path)
+    dom = DOMAINS["tri2d"]
+    b1 = CountingBackend("OSS:120b")
+    r1 = derive_mapping(dom, b1, 20, n_validate=3000, cache=cache)
+    assert b1.calls == 1 and r1.perfect and not r1.cache_hit
+
+    def _boom(*a, **kw):  # any re-validation on the hit path is a bug
+        raise AssertionError("validation must not run on a cache hit")
+
+    monkeypatch.setattr(validate, "validate_scalar_fn", _boom)
+    b2 = CountingBackend("OSS:120b")
+    r2 = derive_mapping(dom, b2, 20, n_validate=3000, cache=cache)
+    assert b2.calls == 0
+    assert r2.cache_hit and r2.cache_key == r1.cache_key
+    assert r2.report == r1.report
+    assert r2.complexity_class == r1.complexity_class
+    assert r2.inference_joules == r1.inference_joules
+    assert cache.hits == 1
+
+
+def test_cache_key_separates_cells(tmp_path):
+    prompt = build_prompt(DOMAINS["tri2d"], 20)
+    base = cache_key("tri2d", "OSS:120b", 20, prompt, n_validate=1000)
+    assert cache_key("tri2d", "R1:70b", 20, prompt, n_validate=1000) != base
+    assert cache_key("tri2d", "OSS:120b", 50, prompt, n_validate=1000) != base
+    assert cache_key("tri2d", "OSS:120b", 20, prompt + "x",
+                     n_validate=1000) != base
+    assert cache_key("tri2d", "OSS:120b", 20, prompt, n_validate=2000) != base
+    assert cache_key("tri2d", "OSS:120b", 20, prompt, n_validate=1000) == base
+
+
+def test_cache_caches_noncompiling_cells_too(tmp_path):
+    """NC cells cost inference joules as well — they amortize identically."""
+    cache = ArtifactCache(tmp_path)
+    dom = DOMAINS["gasket2d"]
+    b1 = CountingBackend("Qw3:235b")
+    r1 = derive_mapping(dom, b1, 20, n_validate=2000, cache=cache)
+    assert not r1.compiled and r1.error
+    b2 = CountingBackend("Qw3:235b")
+    r2 = derive_mapping(dom, b2, 20, n_validate=2000, cache=cache)
+    assert b2.calls == 0 and r2.cache_hit
+    assert not r2.compiled and r2.error == r1.error
+    assert r2.artifact is None
+
+
+def test_cache_corrupt_record_is_a_miss(tmp_path):
+    cache = ArtifactCache(tmp_path)
+    dom = DOMAINS["tri2d"]
+    r1 = derive_mapping(dom, CountingBackend("OSS:120b"), 20,
+                        n_validate=2000, cache=cache)
+    cache.path(r1.cache_key).write_text("{not json")
+    b = CountingBackend("OSS:120b")
+    r2 = derive_mapping(dom, b, 20, n_validate=2000, cache=cache)
+    assert b.calls == 1 and not r2.cache_hit and r2.perfect
+
+
+def test_run_grid_reuses_cache(tmp_path):
+    cache = ArtifactCache(tmp_path)
+    backends = []
+
+    def factory(model):
+        b = CountingBackend(model)
+        backends.append(b)
+        return b
+
+    kw = dict(domains=["tri2d"], models=["OSS:120b", "R1:70b"],
+              stages=(20, 50), n_validate=2000, sample_every=1,
+              backend_factory=factory, cache=cache)
+    g1 = run_grid(**kw)
+    assert len(g1) == 4 and sum(b.calls for b in backends) == 4
+    backends.clear()
+    g2 = run_grid(**kw)
+    assert all(r.cache_hit for r in g2.values())
+    assert sum(b.calls for b in backends) == 0
+    for key in g1:
+        assert g2[key].report == g1[key].report
+
+
+# ---------------------------------------------------------------------------
+# Artifact-driven deployment
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_roundtrip_rebuilds_scalar(tmp_path):
+    cache = ArtifactCache(tmp_path)
+    dom = DOMAINS["pyramid3d"]
+    derive_mapping(dom, CountingBackend("Qw3:32b"), 100,
+                   n_validate=3000, cache=cache)
+    r2 = derive_mapping(dom, CountingBackend("Qw3:32b"), 100,
+                        n_validate=3000, cache=cache)
+    art = r2.artifact
+    assert r2.cache_hit and art is not None
+    for lam in (0, 5, 1000, 10**6):
+        assert tuple(art.scalar_fn()(lam)) == tuple(maps.map_pyramid3d(lam))
+    rec = art.to_record()
+    art2 = MappingArtifact.from_record(rec)
+    assert art2.report == art.report and art2.report_digest == art.report_digest
+
+
+def test_artifact_drives_pallas_kernel(tmp_path):
+    from repro.kernels.domain_map.ops import map_coordinates
+    from repro.kernels.domain_map.ref import map_coordinates_ref
+
+    res = derive_mapping(DOMAINS["tri2d"], CountingBackend("OSS:120b"), 20,
+                         n_validate=3000, cache=ArtifactCache(tmp_path))
+    art = res.artifact
+    assert art.deployable
+    got = map_coordinates(art, 2048, interpret=True)
+    np.testing.assert_array_equal(got, map_coordinates_ref("tri2d", 2048))
+
+
+def test_non_deployable_artifact_rejected(tmp_path):
+    from repro.kernels.domain_map.ops import map_coordinates
+
+    # the 'Menger limit': no model derives a perfect menger3d map
+    res = derive_mapping(DOMAINS["menger3d"], CountingBackend("R1:70b"), 100,
+                         n_validate=2000, cache=ArtifactCache(tmp_path))
+    art = res.artifact
+    assert art is not None and not art.deployable
+    with pytest.raises(ValueError):
+        map_coordinates(art, 1024, interpret=True)
+
+
+def test_artifact_registers_into_registry(tmp_path):
+    res = derive_mapping(DOMAINS["tri2d"], CountingBackend("OSS:120b"), 50,
+                         n_validate=2000, cache=ArtifactCache(tmp_path))
+    reg = MapRegistry()
+    entry = res.artifact.register(reg)
+    assert entry.logic == "derived:OSS:120b:s50"
+    assert reg.resolve("tri2d", entry.logic).scalar(10) == maps.map_tri2d(10)
+
+
+def test_artifact_deployment_analytics(tmp_path):
+    from repro.launch.analytic import artifact_deployment_analytics
+
+    res = derive_mapping(DOMAINS["sierpinski3d"], CountingBackend("OSS:120b"),
+                         100, n_validate=2000, cache=ArtifactCache(tmp_path))
+    art = res.artifact
+    assert art.deployable
+    dep = artifact_deployment_analytics(art)
+    assert dep["logic"] == "bitwise"
+    assert dep["speedup"] > 1000 and dep["energy_reduction"] > 1000
+    assert dep["runs_to_break_even"] < 1.0  # amortized on the first run

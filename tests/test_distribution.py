@@ -125,7 +125,11 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
     rng = np.random.default_rng(1)
     local = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
 
-    @partial(jax.shard_map, mesh=mesh1d, in_specs=P("pod"),
+    try:
+        from jax import shard_map            # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    @partial(shard_map, mesh=mesh1d, in_specs=P("pod"),
              out_specs=P("pod"))
     def reduce_fn(x):
         return compressed_psum_mean(x, "pod", 8)

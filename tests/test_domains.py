@@ -1,7 +1,11 @@
 """Property tests for the six domains and their ground-truth maps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # prefer real hypothesis; fall back to the deterministic shim
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import maps
 from repro.core.domains import DOMAINS

@@ -1,7 +1,11 @@
 """Generalized m-simplex maps (paper's future-work direction)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # prefer real hypothesis; fall back to the deterministic shim
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.maps import map_pyramid3d, map_tri2d
 from repro.core.msimplex import (
