@@ -1,27 +1,41 @@
-"""Full derivation sweep: every domain x a chosen model, with deployment
-accounting — the operational framework of paper Fig. 3 over all six domains,
-driven by the artifact layer: each cell is a cached ``MappingArtifact``, so
-a second run of this script performs zero LLM calls and zero re-validation.
+"""Full derivation sweep served through the MappingService: every paper
+domain x a chosen model, with deployment accounting — the operational
+framework of paper Fig. 3, as a *served* workload: the service streams
+per-cell results, coalesces concurrent requests, and shares one artifact
+store across clients, so a second client (or a second run of this script)
+performs zero LLM calls and zero re-validation.
 
     PYTHONPATH=src python examples/derive_and_deploy.py [model]
 """
 import sys
 
-from repro.core.domains import DOMAINS
-from repro.core.pipeline import run_grid
+from repro.core.domains import DOMAINS, PAPER_DOMAINS
 from repro.launch.analytic import artifact_deployment_analytics
+from repro.serving import MappingService
 
 model = sys.argv[1] if len(sys.argv) > 1 else "OSS:120b"
 N_DEPLOY = 500_000_000
+names = sorted(d.name for d in PAPER_DOMAINS)
 
-grid = run_grid(domains=sorted(DOMAINS), models=[model], stages=(20, 50, 100),
-                n_validate=50_000, sample_every=10)
-hits = sum(1 for r in grid.values() if r.cache_hit)
+# client 1: streams the grid (derives on first run, cache-served afterwards)
+svc = MappingService(n_validate=50_000, sample_every=10)
+grid = {}
+for res in svc.run_grid(domains=names, models=[model], stages=(20, 50, 100)):
+    grid[(res.domain, res.model, res.stage)] = res
 
-print(f"model = {model}   ({hits}/{len(grid)} cells from artifact cache)\n")
+# client 2: a fresh service over the same store — every cell is a hit
+client2 = MappingService(n_validate=50_000, sample_every=10)
+for res in client2.run_grid(domains=names, models=[model], stages=(20, 50, 100)):
+    pass
+
+print(f"model = {model}   (client 1: {svc.stats.derivations} derivations, "
+      f"{svc.stats.cache_hits} cache hits; client 2 shared the store: "
+      f"{client2.stats.cache_hits} hits, {client2.stats.derivations} "
+      f"derivations)\n")
 print(f"{'domain':22s}{'stage':>6s}{'ordered':>9s}{'any':>8s}{'class':>10s}"
       f"{'speedup':>9s}{'energy x':>9s}")
-for name, dom in sorted(DOMAINS.items()):
+for name in names:
+    dom = DOMAINS[name]
     best = None
     for stage in (20, 50, 100):
         res = grid[(name, model, stage)]

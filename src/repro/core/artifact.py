@@ -14,6 +14,10 @@ shared artifact store).
 
 Cache layout:    <root>/<key>.json            (schema-versioned records)
 Cache root:      $REPRO_ARTIFACT_CACHE, else ~/.cache/repro_thread_maps
+Concurrency:     records publish via atomic rename (readers are lock-free);
+                 writers serialize per key through <root>/<key>.lock
+                 (:class:`FileLock`, with stale-lock recovery) — see
+                 ``serving/map_service.py`` for the many-clients front end
 Key:             sha256 over {domain, model, stage, sha256(prompt),
                  n_validate, sample_every} — any change to the prompt
                  template, sampling stage or validation spec changes the key,
@@ -28,6 +32,7 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 import time
 from pathlib import Path
 from typing import Any, Callable
@@ -184,6 +189,132 @@ def resolve_domain(spec) -> str:
 
 
 # ---------------------------------------------------------------------------
+# File locking — many clients, one artifact store
+# ---------------------------------------------------------------------------
+
+
+class FileLock:
+    """Advisory cross-process lock: an O_CREAT|O_EXCL sentinel file.
+
+    Combined with the cache's atomic-rename publish this makes the store
+    safe for concurrent writers: the lock serializes *derivation* of one key
+    across processes while readers stay lock-free (they only ever see a
+    fully-published record or a miss).
+
+    Ownership: each acquirer writes a unique token into the sentinel.  A
+    heartbeat thread refreshes the sentinel's mtime while held, so only a
+    genuinely crashed holder ever looks stale; a stale lock is broken by
+    atomic rename (exactly one contender wins the break), and ``release``
+    verifies the token so a holder whose lock *was* broken never deletes the
+    next holder's sentinel.  All I/O degrades gracefully — an unwritable
+    store yields an unlocked no-op lock, matching the cache's read-only
+    degradation."""
+
+    def __init__(self, path: str | Path, timeout: float = 30.0,
+                 poll: float = 0.02, stale_seconds: float = 60.0):
+        self.path = Path(path)
+        self.timeout = timeout
+        self.poll = poll
+        self.stale_seconds = stale_seconds
+        self.locked = False
+        self.broke_stale = False
+        self.token = f"{os.getpid()}-{os.urandom(8).hex()}"
+        self._hb_stop: "threading.Event | None" = None
+        self._hb_thread: "threading.Thread | None" = None
+
+    def acquire(self) -> "FileLock":
+        deadline = time.monotonic() + self.timeout
+        while True:
+            created = False
+            try:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                created = True
+                with os.fdopen(fd, "w") as f:
+                    f.write(self.token)
+                self.locked = True
+                self._start_heartbeat()
+                return self
+            except FileExistsError:
+                if self._break_if_stale():
+                    continue
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"lock {self.path} held past {self.timeout}s "
+                        f"(stale threshold {self.stale_seconds}s)")
+                time.sleep(self.poll)
+            except OSError:
+                # unwritable store: proceed unlocked (read-only degradation);
+                # never leave an ownerless sentinel behind if the open
+                # succeeded but the token write failed (e.g. ENOSPC)
+                if created:
+                    try:
+                        self.path.unlink()
+                    except OSError:
+                        pass
+                return self
+
+    def _start_heartbeat(self) -> None:
+        """Refresh the sentinel's mtime while held, so contenders never
+        mistake a long-running live derivation for a crashed holder."""
+        self._hb_stop = stop = threading.Event()
+        interval = max(self.stale_seconds / 4.0, 0.05)
+
+        def beat(path=self.path):
+            while not stop.wait(interval):
+                try:
+                    os.utime(path)
+                except OSError:
+                    return  # lock gone (broken or released) — stop beating
+
+        self._hb_thread = threading.Thread(
+            target=beat, name=f"filelock-hb-{self.path.name}", daemon=True)
+        self._hb_thread.start()
+
+    def _break_if_stale(self) -> bool:
+        try:
+            age = time.time() - self.path.stat().st_mtime
+        except OSError:
+            return True  # holder released between our open and stat
+        if age <= self.stale_seconds:
+            return False
+        # atomic rename: of N contenders observing the same stale sentinel,
+        # exactly one wins the break — the losers see ENOENT and re-contend
+        # without ever touching the winner's fresh lock.
+        grave = self.path.with_name(
+            f"{self.path.name}.stale-{os.urandom(4).hex()}")
+        try:
+            os.replace(self.path, grave)
+        except OSError:
+            return True  # someone else broke or released it first
+        self.broke_stale = True
+        try:
+            grave.unlink()
+        except OSError:
+            pass
+        return True
+
+    def release(self) -> None:
+        if not self.locked:
+            return
+        self.locked = False
+        if self._hb_stop is not None:
+            self._hb_stop.set()
+            self._hb_thread.join()
+        try:
+            if self.path.read_text() == self.token:  # still ours?
+                self.path.unlink()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "FileLock":
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# ---------------------------------------------------------------------------
 # Content-addressed derivation cache
 # ---------------------------------------------------------------------------
 
@@ -217,6 +348,13 @@ class ArtifactCache:
 
     def path(self, key: str) -> Path:
         return self.root / f"{key}.json"
+
+    def lock(self, key: str, timeout: float = 30.0,
+             stale_seconds: float = 60.0) -> FileLock:
+        """Cross-process writer lock for one key (see :class:`FileLock`).
+        Readers never need it — ``store`` publishes via atomic rename."""
+        return FileLock(self.root / f"{key}.lock", timeout=timeout,
+                        stale_seconds=stale_seconds)
 
     def load(self, key: str) -> dict[str, Any] | None:
         try:

@@ -358,9 +358,69 @@ _PERMUTED = {
 }
 _NONCOMPILING = "def map_to_coordinates(n:\n    return (n,\n"
 
+# --- extension domains (not in the paper's tables) -------------------------
+# The m-simplex and embedded-fractal families are beyond-paper scenarios; the
+# replay bank emits the canonical derivation for them (every model "solves"
+# them), so extension cells exercise the full synthesize/validate/deploy path
+# without inventing unmeasured failure tables.
+
+
+def _simplex_template(m: int) -> str:
+    """Canonical m-level peel: float m-th-root seed + exact ladder."""
+    return (
+        "import math\n" + _HDR +
+        "    lam = n\n"
+        "    coords = []\n"
+        f"    for level in range({m}, 0, -1):\n"
+        "        x = int(round((math.factorial(level) * lam) "
+        "** (1.0 / level)))\n"
+        "        while math.comb(x + level, level) <= lam:\n"
+        "            x += 1\n"
+        "        while x > 0 and math.comb(x + level - 1, level) > lam:\n"
+        "            x -= 1\n"
+        "        coords.append(x)\n"
+        "        lam -= math.comb(x + level - 1, level)\n"
+        "    return tuple(reversed(coords))\n"
+    )
+
+
+def _digit_fractal_template(base: int, scale: int, vecs) -> str:
+    """Canonical digit decomposition over the generator cell table."""
+    cells = ", ".join(repr(tuple(int(x) for x in v)) for v in vecs)
+    dim = len(vecs[0])
+    names = ["x", "y", "z"][:dim]
+    unpack = ", ".join(f"v{k}" for k in range(dim))
+    return (
+        _HDR +
+        f"    cells = ({cells})\n"
+        + "".join(f"    {nm} = 0\n" for nm in names)
+        + "    s = 1\n    m = n\n"
+        "    while m > 0:\n"
+        f"        {unpack}{',' if dim == 1 else ''} = cells[m % {base}]\n"
+        + "".join(f"        {nm} += v{k} * s\n"
+                  for k, nm in enumerate(names))
+        + f"        m //= {base}\n        s *= {scale}\n"
+        f"    return ({', '.join(names)})\n"
+    )
+
+
+def extension_behavior(domain: str) -> tuple[str, str]:
+    """(logic-class, code) for a beyond-paper domain, generated from the
+    Domain's own geometry metadata — no per-domain table entries needed."""
+    from repro.core.domains import SimplexDomain, get_domain
+
+    d = get_domain(domain)
+    if isinstance(d, SimplexDomain):
+        return "analytical", _simplex_template(d.m)
+    if d.kind == "fractal":
+        return "bitwise", _digit_fractal_template(d.base, d.scale, d.vecs)
+    raise KeyError(f"no replay behavior for extension domain {domain!r}")
+
 
 def mock_behavior(domain: str, model: str, stage: int) -> tuple[str, str]:
     """(behavior-class, code) the replay bank emits for one table cell."""
+    if domain not in pt.ACCURACY:
+        return extension_behavior(domain)
     stage_idx = pt.STAGES.index(stage)
     ordered, any_order, compiled = pt.ACCURACY[domain][model][stage_idx]
     if not compiled:
@@ -401,21 +461,35 @@ MODEL_SPECS = {
 }
 
 
-_REPLAY_BANK_FINGERPRINT: list[str] = []
+_REPLAY_BANK_FINGERPRINTS: dict[tuple, str] = {}
 
 
 def replay_bank_fingerprint() -> str:
     """Content hash of the mock replay bank; folded into artifact-cache keys
     so edits to the measured tables / code templates invalidate cached
-    derivations instead of silently replaying stale results."""
-    if not _REPLAY_BANK_FINGERPRINT:
+    derivations instead of silently replaying stale results.
+
+    The generated extension templates are bank content too — the emitted
+    code itself is hashed, so a generator edit invalidates those cells, and
+    the memo is keyed by the registered extension-domain set so late plugin
+    registrations are picked up rather than frozen out."""
+    from repro.core.domains import DOMAINS
+
+    ext_names = tuple(sorted(set(DOMAINS) - set(pt.ACCURACY)))
+    if ext_names not in _REPLAY_BANK_FINGERPRINTS:
+        ext = []
+        for name in ext_names:
+            try:
+                ext.append((name, *extension_behavior(name)))
+            except KeyError:
+                pass  # a domain the replay bank cannot serve — see mock_behavior
         payload = repr((pt.ACCURACY, pt.LOGIC_CLASS_OVERRIDES, CODE_TEMPLATES,
                         _PERMUTED, _FAIL_2D_ROWMAJOR, _FAIL_3D_ROWMAJOR,
                         _FAIL_WRONG_BASE_2D, _FAIL_WRONG_BASE_3D,
-                        _NONCOMPILING, MODEL_SPECS))
-        _REPLAY_BANK_FINGERPRINT.append(
-            hashlib.sha256(payload.encode()).hexdigest()[:16])
-    return _REPLAY_BANK_FINGERPRINT[0]
+                        _NONCOMPILING, MODEL_SPECS, tuple(ext)))
+        _REPLAY_BANK_FINGERPRINTS[ext_names] = hashlib.sha256(
+            payload.encode()).hexdigest()[:16]
+    return _REPLAY_BANK_FINGERPRINTS[ext_names]
 
 
 class MockLLMBackend:

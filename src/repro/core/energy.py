@@ -151,10 +151,16 @@ class Amortization:
 
 
 def amortization(domain: Domain, logic: str, inference_j: float,
-                 n_points: int = 500_000_000) -> Amortization:
-    """The paper's upfront-cost-vs-permanent-savings calculus (Sec. III.B)."""
-    bb = estimate_bounding_box(domain, n_points)
-    mp = estimate_mapped(domain, logic, n_points)
+                 n_points: int = 500_000_000, *,
+                 bb: DeploymentEstimate | None = None,
+                 mapped: DeploymentEstimate | None = None) -> Amortization:
+    """The paper's upfront-cost-vs-permanent-savings calculus (Sec. III.B).
+
+    Callers that already hold the two deployment estimates pass them via
+    ``bb``/``mapped`` to avoid recomputing."""
+    bb = bb if bb is not None else estimate_bounding_box(domain, n_points)
+    mp = mapped if mapped is not None else estimate_mapped(domain, logic,
+                                                          n_points)
     savings = bb.energy_j - mp.energy_j
     return Amortization(
         inference_j=inference_j,

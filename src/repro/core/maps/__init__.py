@@ -1,8 +1,9 @@
 """Ground-truth mapping functions lambda -> coordinates (Table I).
 
 Facade over the per-tier modules — ``dense`` (closed-form Table-I maps),
-``fractal`` (base-B digit engine + per-geometry plugins) and ``variants``
-(the Tables VIII/IX logic classes).  Importing this package registers every
+``fractal`` (base-B digit engine + per-geometry plugins), ``variants``
+(the Tables VIII/IX logic classes), ``simplex`` (the m-simplex family) and
+``embedded`` (the embedded-2D-fractal family).  Importing this package registers every
 built-in map into the :mod:`repro.core.registry`; the dispatch helpers below
 (``np_map``/``jnp_map``) and the compatibility dicts (``SCALAR_MAPS``/
 ``VARIANT_MAPS``) all resolve through that registry — no string-keyed
@@ -19,9 +20,16 @@ from repro.core.maps.dense import (  # noqa: F401
     jnp_map_pyramid3d, jnp_map_tri2d, map_pyramid3d, map_tri2d,
     np_map_pyramid3d, np_map_tri2d, unmap_pyramid3d, unmap_tri2d,
 )
+from repro.core.maps.embedded import (  # noqa: F401
+    map_cantor2d, map_vicsek2d,
+)
 from repro.core.maps.fractal import (  # noqa: F401
     jnp_map_fractal, map_carpet2d, map_fractal, map_gasket2d, map_menger3d,
     map_sierpinski3d, np_map_fractal, register_fractal_domain, unmap_fractal,
+)
+from repro.core.maps.simplex import (  # noqa: F401
+    jnp_map_msimplex, map_msimplex, np_map_msimplex, register_simplex_domain,
+    unmap_msimplex,
 )
 from repro.core.maps.variants import (  # noqa: F401
     map_pyramid3d_binsearch, map_pyramid3d_cbrt_loop, map_pyramid3d_linear,

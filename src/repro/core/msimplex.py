@@ -85,6 +85,58 @@ def enumerate_msimplex(n_points: int, m: int) -> np.ndarray:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Vectorized tiers (module-generic: works for numpy int64 and jax.numpy int32)
+# ---------------------------------------------------------------------------
+
+
+def vec_simplex_size(xp, x, m: int):
+    """C(x+m-1, m) elementwise, with division interleaved stepwise so the
+    running value stays a binomial coefficient: after step i the register
+    holds C(x+i-1, i), and C(x+i-2, i-1)*(x+i-1) = i*C(x+i-1, i) makes each
+    division exact.  Intermediates are bounded by ~m*C(x+m-1, m), so in an
+    int32 kernel the tier is exact for lambda up to ~2^31/m (the same order
+    as the existing dense tiers' 8*lam+1 / z^3 seeds) instead of the
+    ~(2^31)^(1/m) a naive full product would allow."""
+    r = xp.ones_like(x)
+    for i in range(1, m + 1):
+        r = r * (x + i - 1) // i
+    return r
+
+
+def vec_simplex_layer(xp, lam, m: int):
+    """Vectorized `simplex_layer`: float m-th-root seed (the generalized
+    sqrt/cbrt of Table I) + exact integer correction ladder."""
+    if m == 1:
+        return lam
+    ftype = xp.float64 if xp is np else xp.float32
+    seed = xp.power(lam.astype(ftype) * float(math.factorial(m)), 1.0 / m)
+    x = seed.astype(lam.dtype)
+    for _ in range(4):
+        x = xp.where(vec_simplex_size(xp, x + 1, m) <= lam, x + 1, x)
+        x = xp.where((x > 0) & (vec_simplex_size(xp, x, m) > lam), x - 1, x)
+    return xp.maximum(x, 0)
+
+
+def vec_map_msimplex(xp, lams, m: int):
+    """Vectorized `map_msimplex`: (N,) lambdas -> (N, m) sorted coords.
+
+    `xp` is the array module — numpy (exact int64, the validation tier) or
+    jax.numpy (traceable int32, the jitted tier)."""
+    rem = xp.asarray(lams)
+    cols = []
+    for level in range(m, 0, -1):
+        x = vec_simplex_layer(xp, rem, level)
+        cols.append(x)
+        rem = rem - vec_simplex_size(xp, x, level)
+    return xp.stack(list(reversed(cols)), axis=-1)
+
+
+def np_map_msimplex(lams: np.ndarray, m: int) -> np.ndarray:
+    """Exact vectorized int64 map (the 10^6-point validation tier)."""
+    return vec_map_msimplex(np, np.asarray(lams, dtype=np.int64), m)
+
+
 def block_accounting_msimplex(n_points: int, m: int, block: int = 256) -> dict:
     """BB waste for the m-simplex: the box is n^m vs C(n+m-1, m) ~ n^m/m!.
 

@@ -1,4 +1,5 @@
-"""The four-phase automated discovery pipeline (Fig. 3).
+"""The four-phase automated discovery pipeline (Fig. 3), as composable
+stages.
 
   1. Context Sampling      — first N domain points (N in {20, 50, 100}),
   2. Symbolic Inference    — backend.generate over the Appendix-A prompt,
@@ -6,6 +7,14 @@
   4. Integration           — validated map handed to the deployment layer
                              (Pallas index_map / block-space kernels) as a
                              MappingArtifact.
+
+Each phase is an explicit stage function — ``prepare_request`` (phases 1+2
+prep: context sampling, prompt, content address), ``stage_inference``,
+``stage_synthesis``, ``stage_validation`` — and ``derive_mapping`` is their
+composition plus the cache check.  The stages are what ``serving/
+map_service.py`` fronts with locking and request coalescing; the content
+address computed by ``prepare_request`` is the coalescing key, so the local
+path and the served path can never disagree on cache identity.
 
 Derivation is a one-time upfront investment: every cell is content-addressed
 (domain + model + stage + prompt + validation spec) into the artifact cache,
@@ -108,6 +117,7 @@ def _record_from_result(res: DerivationResult) -> dict:
 
 
 def _result_from_record(rec: dict, domain: Domain, key: str) -> DerivationResult:
+    """Rehydrate a cached derivation record (the serving layer's read path)."""
     return DerivationResult(
         domain=rec["domain"], model=rec["model"], stage=rec["stage"],
         response=LLMResponse(**rec["response"]),
@@ -122,9 +132,107 @@ def _result_from_record(rec: dict, domain: Domain, key: str) -> DerivationResult
     )
 
 
+#: public names for the serving layer (same record schema, one code path)
+record_from_result = _record_from_result
+result_from_record = _result_from_record
+
+
 # ---------------------------------------------------------------------------
-# One cell
+# Composable stages (one cell = prepare -> inference -> synthesis ->
+# validation; the cache check wraps the whole chain)
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DerivationRequest:
+    """One fully-addressed pipeline cell: everything phases 2-4 need, plus
+    the content address that identifies it in the cache and in the serving
+    layer's coalescing table."""
+
+    domain: Domain
+    backend: LLMBackend
+    stage: int
+    n_validate: int
+    sample_every: int
+    prompt: str
+    key: str
+
+
+def prepare_request(
+    domain: Domain,
+    backend: LLMBackend,
+    stage: int = 100,
+    n_validate: int = 1_000_000,
+    sample_every: int = 1,
+) -> DerivationRequest:
+    """Phases 1+2 prep: sample context, build the Appendix-A prompt, and
+    content-address the cell.  The prompt is part of the address, so a
+    prompt-template change invalidates the cache; backends may expose a
+    content fingerprint (e.g. the mock replay bank) so behavior edits
+    invalidate their cached cells too."""
+    prompt = build_prompt(domain, stage)
+    key = cache_key(domain.name, backend.name, stage, prompt,
+                    n_validate=n_validate, sample_every=sample_every,
+                    backend_fingerprint=getattr(backend, "cache_fingerprint",
+                                                None))
+    return DerivationRequest(domain=domain, backend=backend, stage=stage,
+                             n_validate=n_validate, sample_every=sample_every,
+                             prompt=prompt, key=key)
+
+
+def stage_inference(req: DerivationRequest) -> LLMResponse:
+    """Phase 2 — Symbolic Inference over the prepared prompt."""
+    return req.backend.generate(
+        req.prompt, meta={"domain": req.domain.name, "stage": req.stage})
+
+
+def stage_synthesis(resp: LLMResponse) -> synthesis.SynthesizedMap:
+    """Phase 3 — extraction + rule check + sandboxed compile (raises
+    ``SynthesisError`` => the cell is (NC))."""
+    return synthesis.synthesize(resp.text)
+
+
+def stage_validation(
+    req: DerivationRequest,
+    synth: synthesis.SynthesizedMap,
+    gt: np.ndarray | None = None,
+) -> tuple[validate.ValidationReport, str | None]:
+    """Phase 3b — the paper's 10^6-point ground-truth check, plus the
+    complexity classification of validated candidates."""
+    rep = validate.validate_scalar_fn(
+        synth.fn, req.domain, n_points=req.n_validate, gt=gt,
+        sample_every=req.sample_every)
+    cls = complexity.classify(synth.fn)["class"] if rep.error is None else None
+    return rep, cls
+
+
+def run_stages(
+    req: DerivationRequest,
+    gt: np.ndarray | Callable[[], np.ndarray] | None = None,
+) -> DerivationResult:
+    """Phases 2-4 for one prepared cell (no cache interaction)."""
+    t0 = time.monotonic()
+    resp = stage_inference(req)
+    try:
+        synth = stage_synthesis(resp)
+    except synthesis.SynthesisError as e:
+        return DerivationResult(
+            domain=req.domain.name, model=req.backend.name, stage=req.stage,
+            response=resp, compiled=False, source=None,
+            report=validate.FAILED(req.n_validate, str(e)),
+            complexity_class=None, wall_seconds=time.monotonic() - t0,
+            inference_joules=resp.joules, domainobj=req.domain,
+            error=str(e), cache_key=req.key,
+        )
+    if callable(gt):
+        gt = gt()
+    rep, cls = stage_validation(req, synth, gt)
+    return DerivationResult(
+        domain=req.domain.name, model=req.backend.name, stage=req.stage,
+        response=resp, compiled=True, source=synth.source, report=rep,
+        complexity_class=cls, wall_seconds=time.monotonic() - t0,
+        inference_joules=resp.joules, domainobj=req.domain, cache_key=req.key,
+    )
 
 
 def derive_mapping(
@@ -144,50 +252,14 @@ def derive_mapping(
     only invoked on a cache miss, so cached sweeps never enumerate."""
     if cache is _USE_DEFAULT_CACHE:
         cache = default_cache()
-    t0 = time.monotonic()
-    # Phase 1+2: sample context, build prompt — the prompt is part of the
-    # content address, so a prompt-template change invalidates the cache.
-    prompt = build_prompt(domain, stage)
-    # backends may expose a content fingerprint (e.g. the mock replay bank)
-    # so behavior edits invalidate their cached cells
-    key = cache_key(domain.name, backend.name, stage, prompt,
-                    n_validate=n_validate, sample_every=sample_every,
-                    backend_fingerprint=getattr(backend, "cache_fingerprint",
-                                                None))
+    req = prepare_request(domain, backend, stage, n_validate, sample_every)
     if cache is not None:
-        rec = cache.load(key)
+        rec = cache.load(req.key)
         if rec is not None:
-            return _result_from_record(rec, domain, key)
-    resp = backend.generate(prompt, meta={"domain": domain.name, "stage": stage})
-    # Phase 3: synthesis
-    try:
-        synth = synthesis.synthesize(resp.text)
-    except synthesis.SynthesisError as e:
-        rep = validate.FAILED(n_validate, str(e))
-        res = DerivationResult(
-            domain=domain.name, model=backend.name, stage=stage, response=resp,
-            compiled=False, source=None, report=rep, complexity_class=None,
-            wall_seconds=time.monotonic() - t0, inference_joules=resp.joules,
-            domainobj=domain, error=str(e), cache_key=key,
-        )
-        if cache is not None:
-            cache.store(key, _record_from_result(res))
-        return res
-    # Phase 3b: validation against ground truth (the paper's 10^6-point check)
-    if callable(gt):
-        gt = gt()
-    rep = validate.validate_scalar_fn(
-        synth.fn, domain, n_points=n_validate, gt=gt, sample_every=sample_every
-    )
-    cls = complexity.classify(synth.fn)["class"] if rep.error is None else None
-    res = DerivationResult(
-        domain=domain.name, model=backend.name, stage=stage, response=resp,
-        compiled=True, source=synth.source, report=rep, complexity_class=cls,
-        wall_seconds=time.monotonic() - t0, inference_joules=resp.joules,
-        domainobj=domain, cache_key=key,
-    )
+            return _result_from_record(rec, domain, req.key)
+    res = run_stages(req, gt)
     if cache is not None:
-        cache.store(key, _record_from_result(res))
+        cache.store(req.key, _record_from_result(res))
     return res
 
 
@@ -210,12 +282,14 @@ def run_grid(
     """Sweep every (domain x model x stage) cell through the artifact cache.
 
     Ground truth is enumerated once per domain and shared across the sweep;
-    cells already in the cache cost one JSON read.  Returns a dict keyed
-    (domain, model, stage)."""
+    cells already in the cache cost one JSON read.  Defaults sweep the
+    paper's measured grid (the six Table-II..VII domains x 11 models x 3
+    stages); extension domains (m-simplex, embedded fractals) are swept by
+    passing them explicitly.  Returns a dict keyed (domain, model, stage)."""
     from repro.core import paper_tables as pt
     from repro.core.backends import MockLLMBackend
 
-    domains = list(domains) if domains is not None else sorted(DOMAINS)
+    domains = list(domains) if domains is not None else sorted(pt.ACCURACY)
     models = list(models) if models is not None else list(pt.MODELS)
     stages = list(stages) if stages is not None else list(pt.STAGES)
     backend_factory = backend_factory or MockLLMBackend

@@ -18,7 +18,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.domains import MENGER_VOIDS
+from repro.core import msimplex as ms
+from repro.core.domains import (
+    EMBEDDED_FRACTAL_DOMAINS, MENGER_VOIDS, MSIMPLEX_MS,
+)
 from repro.core.registry import register_map
 
 _MENGER_VOID_CELLS = sorted(9 * x + 3 * y + z for x, y, z in MENGER_VOIDS)
@@ -178,3 +181,84 @@ def menger3d_membership(axes, ndigits):
         ok &= ones < 2
         x, y, z = x // 3, y // 3, z // 3
     return ok
+
+
+# ---------------------------------------------------------------------------
+# m-simplex family: vectorized m-th-root layer peel (generalizes _vec_isqrt /
+# _tet_z — fp32 seed + exact int32 correction ladder, one peel per level).
+# The peel itself is the module-generic implementation in core/msimplex.py
+# (shared with the numpy/jnp tiers), instantiated here with jax.numpy.
+# ---------------------------------------------------------------------------
+
+
+def _register_msimplex_tiers(m: int):
+    def coords(lam, ndigits, _m=m):
+        del ndigits  # closed-form per level; digits are a fractal concept
+        rem = lam
+        axes = []
+        for level in range(_m, 0, -1):
+            x = ms.vec_simplex_layer(jnp, rem, level)
+            axes.append(x)
+            rem = rem - ms.vec_simplex_size(jnp, x, level)
+        return list(reversed(axes))
+
+    def membership(axes, ndigits):
+        del ndigits
+        ok = axes[0] >= 0
+        for lo, hi in zip(axes, axes[1:]):
+            ok &= lo <= hi
+        return ok
+
+    register_map(f"msimplex{m}", "analytical",
+                 tiers={"pallas": coords, "membership": membership})
+
+
+for _m in MSIMPLEX_MS:
+    _register_msimplex_tiers(_m)
+
+
+# ---------------------------------------------------------------------------
+# Embedded-2D-fractal family: generic digit engine driven by the domain's
+# generator table (arithmetic where-ladders — no gathers), so a new family
+# member needs no kernel code at all.
+# ---------------------------------------------------------------------------
+
+
+def _register_embedded_fractal_tiers(domain):
+    base, scale, dim = domain.base, domain.scale, domain.dim
+    vecs = tuple(tuple(int(x) for x in v) for v in domain.vecs)
+    cell_codes = [sum(v[k] * scale ** (dim - 1 - k) for k in range(dim))
+                  for v in vecs]
+
+    def coords(lam, ndigits):
+        axes = [jnp.zeros_like(lam) for _ in range(dim)]
+        m, s = lam, 1
+        for _ in range(ndigits):
+            d = m % base
+            for k in range(dim):
+                for digit, v in enumerate(vecs):
+                    if v[k]:
+                        axes[k] += jnp.where(d == digit, v[k] * s, 0)
+            m, s = m // base, s * scale
+        return axes
+
+    def membership(axes, ndigits):
+        ok = jnp.ones(axes[0].shape, dtype=bool)
+        cur = list(axes)
+        for _ in range(ndigits):
+            code = jnp.zeros_like(cur[0])
+            for k in range(dim):
+                code = code * scale + cur[k] % scale
+            hit = jnp.zeros_like(ok)
+            for c in cell_codes:
+                hit |= code == c
+            ok &= hit
+            cur = [a // scale for a in cur]
+        return ok
+
+    register_map(domain.name, "bitwise",
+                 tiers={"pallas": coords, "membership": membership})
+
+
+for _dom in EMBEDDED_FRACTAL_DOMAINS:
+    _register_embedded_fractal_tiers(_dom)

@@ -64,12 +64,11 @@ def _membership_kernel(o_ref, *, membership_fn, block_n: int,
                        extent: tuple[int, ...], ndigits: int):
     pid = pl.program_id(0)
     lam = pid * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
-    if len(extent) == 2:
-        w = extent[1]
-        axes = [lam // w, lam % w]
-    else:
-        h, w = extent[1], extent[2]
-        axes = [lam // (h * w), (lam // w) % h, lam % w]
+    # row-major unravel over the box, for any dimensionality
+    strides = [1] * len(extent)
+    for k in range(len(extent) - 2, -1, -1):
+        strides[k] = strides[k + 1] * extent[k + 1]
+    axes = [(lam // s) % e for s, e in zip(strides, extent)]
     ok = membership_fn(axes, ndigits)
     o_ref[...] = ok.astype(jnp.int32)
 

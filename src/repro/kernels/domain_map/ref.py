@@ -17,10 +17,5 @@ def bb_membership_ref(spec, extent: tuple[int, ...]) -> np.ndarray:
     """Row-major membership mask over the bounding box (BB strategy)."""
     d = get_domain(resolve_domain(spec))
     lam = np.arange(int(np.prod(extent)), dtype=np.int64)
-    if d.dim == 2:
-        w = extent[1]
-        coords = np.stack([lam // w, lam % w], axis=-1)
-    else:
-        h, w = extent[1], extent[2]
-        coords = np.stack([lam // (h * w), (lam // w) % h, lam % w], axis=-1)
+    coords = np.stack(np.unravel_index(lam, extent), axis=-1)
     return d.contains(coords).astype(np.int32)

@@ -182,34 +182,71 @@ def _state_bytes(cfg: ModelConfig, b: int) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Artifact-driven deployment analytics (block-space kernels, Sec. V.C)
+# Registry/artifact-driven deployment analytics (block-space kernels, Sec. V.C)
 # ---------------------------------------------------------------------------
 
 
-def artifact_deployment_analytics(artifact, n_points: int = 500_000_000,
-                                  block: int = 256) -> dict:
-    """Deployment economics of a validated ``MappingArtifact``: mapped vs
-    bounding-box block accounting, calibrated A100 cost model, and the
-    amortization of the artifact's one-time inference energy."""
+def _resolve_deployment(spec, n_points: int, block: int):
+    """(domain, logic, mapped estimate, bb estimate) for any map spec —
+    a domain name, ``Domain``, registry ``MapEntry`` or validated
+    ``MappingArtifact``.  The logic class resolves through the MapRegistry
+    (a bare domain name means its ground-truth entry), so the numbers always
+    reflect the tier that would actually deploy — no per-domain if-chains."""
     from repro.core import energy
+    from repro.core.artifact import resolve_spec
     from repro.core.domains import get_domain
+    from repro.core.registry import REGISTRY
 
-    d = get_domain(artifact.domain)
-    mp = energy.estimate_mapped(d, artifact.logic, n_points, block)
+    domain_name, logic = resolve_spec(spec)
+    d = get_domain(domain_name)
+    if logic is None:
+        logic = REGISTRY.ground_truth(domain_name).logic
+    mp = energy.estimate_mapped(d, logic, n_points, block)
     bb = energy.estimate_bounding_box(d, n_points, block)
-    am = energy.amortization(d, artifact.logic, artifact.inference_joules,
-                             n_points)
+    return d, logic, mp, bb
+
+
+def _deployment_dict(domain_name: str, logic: str, n_points: int,
+                     mp, bb) -> dict:
     return {
-        "domain": artifact.domain, "model": artifact.model,
-        "stage": artifact.stage, "logic": artifact.logic,
-        "complexity_class": artifact.complexity_class,
-        "report_digest": artifact.report_digest,
-        "n_points": n_points,
+        "domain": domain_name, "logic": logic, "n_points": n_points,
         "mapped_time_ms": mp.time_ms, "mapped_energy_j": mp.energy_j,
         "mapped_blocks": mp.total_blocks,
         "bb_time_ms": bb.time_ms, "bb_energy_j": bb.energy_j,
         "bb_blocks": bb.total_blocks, "bb_wasted_blocks": bb.wasted_blocks,
+        "bb_waste_fraction": bb.waste_fraction,
+        "speedup": bb.time_ms / mp.time_ms if mp.time_ms > 0 else float("inf"),
+        "energy_reduction": (bb.energy_j / mp.energy_j
+                             if mp.energy_j > 0 else float("inf")),
+    }
+
+
+def map_deployment_analytics(spec, n_points: int = 500_000_000,
+                             block: int = 256) -> dict:
+    """Deployment economics of any map spec: mapped vs bounding-box block
+    accounting (any dimensionality, incl. the m-simplex and embedded-fractal
+    families) plus the calibrated A100 cost model."""
+    d, logic, mp, bb = _resolve_deployment(spec, n_points, block)
+    return _deployment_dict(d.name, logic, n_points, mp, bb)
+
+
+def artifact_deployment_analytics(artifact, n_points: int = 500_000_000,
+                                  block: int = 256) -> dict:
+    """Deployment economics of a validated ``MappingArtifact``: the registry
+    accounting of :func:`map_deployment_analytics` plus the amortization of
+    the artifact's one-time inference energy."""
+    from repro.core import energy
+
+    d, logic, mp, bb = _resolve_deployment(artifact, n_points, block)
+    am = energy.amortization(d, logic, artifact.inference_joules, n_points,
+                             bb=bb, mapped=mp)
+    out = _deployment_dict(d.name, logic, n_points, mp, bb)
+    out.update({
+        "model": artifact.model, "stage": artifact.stage,
+        "complexity_class": artifact.complexity_class,
+        "report_digest": artifact.report_digest,
         "speedup": am.speedup, "energy_reduction": am.energy_reduction,
         "inference_joules": artifact.inference_joules,
         "runs_to_break_even": am.runs_to_break_even,
-    }
+    })
+    return out

@@ -1,1 +1,3 @@
-"""Serving layer: prefill + batched decode with per-family caches."""
+"""Serving layer: the LM prefill/decode engine (``engine``) and the
+concurrency-safe mapping-artifact service (``map_service``)."""
+from repro.serving.map_service import MappingService, ServiceStats  # noqa: F401

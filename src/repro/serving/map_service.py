@@ -1,0 +1,235 @@
+"""MappingService — the many-clients front end of the derivation pipeline.
+
+The paper's economics hinge on one-time derivation amortized across many GPU
+workloads; this service makes the "many clients share one artifact store"
+scenario safe and cheap:
+
+  * process-safety — writers serialize per content address through the
+    store's ``FileLock`` (atomic-rename publish keeps readers lock-free, and
+    stale locks from crashed holders are broken after a threshold), so two
+    *processes* deriving the same cell yield one derivation + one record;
+  * request coalescing — an in-flight table keyed by the cell's content
+    address means N concurrent *threads* asking for the same (domain, model,
+    stage) trigger exactly one pipeline run and all receive the shared
+    ``DerivationResult``;
+  * streaming sweeps — ``run_grid`` yields each cell's result as soon as it
+    resolves (cache hit or fresh derivation) instead of buffering the whole
+    (domain x model x stage) grid.
+
+The service composes the pipeline's stage functions (``prepare_request`` /
+``run_stages``) rather than reimplementing them, so the served path and the
+local ``derive_mapping`` path share one content-address scheme by
+construction.  ``REPRO_ARTIFACT_CACHE=off`` degrades the service to
+coalescing-only: concurrent requests for one cell still share a single
+derivation, but nothing persists, so sequential repeats re-derive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Iterable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.artifact import ArtifactCache, MappingArtifact, default_cache
+from repro.core.backends import LLMBackend, MockLLMBackend
+from repro.core.domains import DOMAINS, Domain
+
+_USE_DEFAULT_CACHE = object()
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Operational counters: where each served request was resolved."""
+
+    derivations: int = 0     # pipeline actually ran (this process was leader)
+    cache_hits: int = 0      # resolved from the shared artifact store
+    coalesced: int = 0       # piggybacked on another thread's in-flight run
+    stale_locks_broken: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _InFlight:
+    """One in-progress derivation: followers wait on the event and share the
+    leader's result (or its exception)."""
+
+    __slots__ = ("event", "result", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result: pipeline.DerivationResult | None = None
+        self.error: BaseException | None = None
+
+
+class MappingService:
+    """Concurrency-safe artifact serving for (domain, model, stage) cells.
+
+    One instance per process is the intended shape — its in-flight table
+    coalesces threads, while the file lock in the artifact store coordinates
+    across processes sharing the same cache root."""
+
+    def __init__(
+        self,
+        cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
+        backend_factory: Callable[[str], LLMBackend] = MockLLMBackend,
+        n_validate: int = 100_000,
+        sample_every: int = 50,
+        lock_timeout: float = 300.0,
+        stale_lock_seconds: float = 60.0,
+    ):
+        # lock_timeout bounds how long a follower process waits on a *live*
+        # leader (whose heartbeat keeps the lock fresh) — it must comfortably
+        # exceed a worst-case derivation, not a worst-case crash
+        # (stale_lock_seconds covers crashes).
+        if cache is _USE_DEFAULT_CACHE:
+            cache = default_cache()
+        self.cache = cache
+        self.backend_factory = backend_factory
+        self.n_validate = n_validate
+        self.sample_every = sample_every
+        self.lock_timeout = lock_timeout
+        self.stale_lock_seconds = stale_lock_seconds
+        self.stats = ServiceStats()
+        self._backends: dict[str, LLMBackend] = {}
+        self._inflight: dict[str, _InFlight] = {}
+        self._mu = threading.Lock()
+
+    # -- request identity --------------------------------------------------
+    def _backend(self, model: str) -> LLMBackend:
+        backend = self._backends.get(model)
+        if backend is None:
+            # construct outside the service lock (a real backend may load
+            # weights / open sessions); first insert wins
+            built = self.backend_factory(model)
+            with self._mu:
+                backend = self._backends.setdefault(model, built)
+        return backend
+
+    def _domain(self, domain: str | Domain) -> Domain:
+        if isinstance(domain, Domain):
+            return domain
+        return DOMAINS[domain]
+
+    def request(self, domain: str | Domain, model: str,
+                stage: int = 100) -> pipeline.DerivationRequest:
+        """The fully-addressed request for one cell — its ``key`` is both the
+        cache address and the coalescing identity."""
+        return pipeline.prepare_request(
+            self._domain(domain), self._backend(model), stage,
+            n_validate=self.n_validate, sample_every=self.sample_every)
+
+    # -- serving -----------------------------------------------------------
+    def derive(
+        self,
+        domain: str | Domain,
+        model: str,
+        stage: int = 100,
+        gt: np.ndarray | Callable[[], np.ndarray] | None = None,
+    ) -> pipeline.DerivationResult:
+        """Serve one cell: cache -> coalesce -> (locked) pipeline run."""
+        req = self.request(domain, model, stage)
+        # lock-free fast path: a published record needs no coordination
+        res = self._from_cache(req)
+        if res is not None:
+            return res
+
+        with self._mu:
+            fl = self._inflight.get(req.key)
+            leader = fl is None
+            if leader:
+                fl = self._inflight[req.key] = _InFlight()
+        if not leader:
+            fl.event.wait()
+            with self._mu:
+                self.stats.coalesced += 1
+            if fl.error is not None:
+                raise fl.error
+            return fl.result  # type: ignore[return-value]
+
+        try:
+            fl.result = self._derive_locked(req, gt)
+            return fl.result
+        except BaseException as e:
+            fl.error = e
+            raise
+        finally:
+            with self._mu:
+                self._inflight.pop(req.key, None)
+            fl.event.set()
+
+    def _from_cache(self, req: pipeline.DerivationRequest):
+        if self.cache is None:
+            return None
+        rec = self.cache.load(req.key)
+        if rec is None:
+            return None
+        with self._mu:
+            self.stats.cache_hits += 1
+        return pipeline.result_from_record(rec, req.domain, req.key)
+
+    def _derive_locked(self, req: pipeline.DerivationRequest, gt):
+        """Leader path: under the store's per-key file lock, re-check the
+        cache (another process may have published while we waited), then run
+        the pipeline stages and publish atomically."""
+        if self.cache is None:
+            with self._mu:
+                self.stats.derivations += 1
+            return pipeline.run_stages(req, gt)
+        lock = self.cache.lock(req.key, timeout=self.lock_timeout,
+                               stale_seconds=self.stale_lock_seconds)
+        with lock:
+            if lock.broke_stale:
+                with self._mu:
+                    self.stats.stale_locks_broken += 1
+            res = self._from_cache(req)
+            if res is not None:
+                return res
+            res = pipeline.run_stages(req, gt)
+            self.cache.store(req.key, pipeline.record_from_result(res))
+            with self._mu:
+                self.stats.derivations += 1
+            return res
+
+    def artifact(self, domain: str | Domain, model: str,
+                 stage: int = 100) -> MappingArtifact | None:
+        """The persistent product of a served cell (None if it failed)."""
+        return self.derive(domain, model, stage).artifact
+
+    # -- streaming sweeps --------------------------------------------------
+    def run_grid(
+        self,
+        domains: Iterable[str | Domain] | None = None,
+        models: Iterable[str] | None = None,
+        stages: Sequence[int] | None = None,
+    ) -> Iterator[pipeline.DerivationResult]:
+        """Served grid sweep, streaming per-cell results as they resolve.
+
+        Ground truth is enumerated lazily once per domain and shared across
+        that domain's cells; fully-cached sweeps never enumerate at all.
+        Defaults match ``pipeline.run_grid`` (the paper's measured grid)."""
+        from repro.core import paper_tables as pt
+
+        domains = list(domains) if domains is not None else sorted(pt.ACCURACY)
+        models = list(models) if models is not None else list(pt.MODELS)
+        stages = list(stages) if stages is not None else list(pt.STAGES)
+        for dom_name in domains:
+            dom = self._domain(dom_name)
+            gt_memo: dict[str, np.ndarray] = {}
+
+            def lazy_gt(d=dom, memo=gt_memo):
+                if "gt" not in memo:
+                    memo["gt"] = d.enumerate_points(self.n_validate)
+                return memo["gt"]
+
+            for model in models:
+                for stage in stages:
+                    yield self.derive(dom, model, stage, gt=lazy_gt)
+
+    def grid(self, domains=None, models=None, stages=None,
+             ) -> dict[tuple[str, str, int], pipeline.DerivationResult]:
+        """Collected (non-streaming) form of :meth:`run_grid`."""
+        return {(r.domain, r.model, r.stage): r
+                for r in self.run_grid(domains, models, stages)}

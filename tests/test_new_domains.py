@@ -1,0 +1,187 @@
+"""The m-simplex (m=2..5) and embedded-2D-fractal families as first-class
+registry plugins: every tier resolvable, pallas/scalar agreement at >=10^5
+points, round-trips, membership, block-waste accounting, and the full
+artifact->deployment flow."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.domains import (
+    DOMAINS, EMBEDDED_FRACTAL_DOMAINS, MSIMPLEX_MS, bb_block_dims,
+)
+from repro.core.registry import REGISTRY
+from repro.kernels.domain_map.ops import bb_membership, map_coordinates
+from repro.launch.analytic import map_deployment_analytics
+
+MSIMPLEX = tuple(f"msimplex{m}" for m in MSIMPLEX_MS)
+EMBEDDED = tuple(d.name for d in EMBEDDED_FRACTAL_DOMAINS)
+NEW_DOMAINS = MSIMPLEX + EMBEDDED
+
+N_AGREE = 102_400  # >= 10^5 points for the pallas-vs-scalar acceptance check
+
+
+def test_registry_includes_both_families():
+    domains = REGISTRY.domains()
+    for name in NEW_DOMAINS:
+        assert name in domains, name
+        assert name in DOMAINS, name
+
+
+@pytest.mark.parametrize("name", NEW_DOMAINS)
+def test_all_six_tiers_resolvable(name):
+    entry = REGISTRY.ground_truth(name)
+    assert entry.ground_truth
+    for tier in ("scalar", "unmap", "numpy", "jnp", "pallas", "membership"):
+        assert callable(REGISTRY.tier(name, None, tier)), (name, tier)
+
+
+@pytest.mark.parametrize("name", NEW_DOMAINS)
+def test_pallas_tier_agrees_with_scalar_tier_1e5(name):
+    """The acceptance gate: in-kernel coordinates == exact scalar map over
+    >= 10^5 points."""
+    scalar = REGISTRY.tier(name, None, "scalar")
+    dim = DOMAINS[name].dim
+    want = np.array([scalar(i) for i in range(N_AGREE)], dtype=np.int64)
+    assert want.shape == (N_AGREE, dim)
+    got = map_coordinates(name, N_AGREE, block_n=12_800, interpret=True)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", NEW_DOMAINS)
+def test_scalar_unmap_roundtrip_large_lambda(name):
+    scalar = REGISTRY.tier(name, None, "scalar")
+    unmap = REGISTRY.tier(name, None, "unmap")
+    for lam in (0, 1, 17, 4096, 10**6 + 7, 10**9 + 1):
+        coords = scalar(lam)
+        assert all(int(c) >= 0 for c in coords), (name, lam)
+        assert unmap(*coords) == lam, (name, lam)
+
+
+@pytest.mark.parametrize("name", NEW_DOMAINS)
+def test_numpy_tier_matches_enumeration(name):
+    d = DOMAINS[name]
+    n = 20_000
+    got = REGISTRY.tier(name, None, "numpy")(np.arange(n, dtype=np.int64))
+    np.testing.assert_array_equal(got, d.enumerate_points(n))
+
+
+@pytest.mark.parametrize("m", MSIMPLEX_MS)
+def test_msimplex_jnp_tier_exact_at_large_lambda(m):
+    """The int32 kernel tier must agree with the exact int64 map up to
+    ~2^31/m — the stepwise-division binomial keeps intermediates in range
+    (a naive product overflows m=5 beyond ~1.8e7)."""
+    import jax.numpy as jnp
+
+    from repro.core import msimplex as ms
+
+    lams = np.array([0, 1, 18_400_000, 10**8, (2**31 - 8) // m // 2],
+                    dtype=np.int64)
+    want = ms.np_map_msimplex(lams, m)
+    got = np.asarray(ms.vec_map_msimplex(jnp, jnp.asarray(lams, jnp.int32), m))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m", MSIMPLEX_MS)
+def test_msimplex_domain_wraps_core_math(m):
+    """The Domain plugin must expose exactly core/msimplex.py's geometry."""
+    from repro.core import msimplex as ms
+
+    d = DOMAINS[f"msimplex{m}"]
+    assert d.dim == m and d.kind == "dense"
+    assert d.size(7) == ms.simplex_size(7, m)
+    scalar = REGISTRY.tier(d.name, None, "scalar")
+    for lam in (0, 5, 999, 123_456):
+        assert tuple(scalar(lam)) == ms.map_msimplex(lam, m)
+
+
+@pytest.mark.parametrize("name", EMBEDDED)
+def test_embedded_membership_counts_full_level(name):
+    """Valid cells in a full-level bounding box == |domain| at that level."""
+    d = DOMAINS[name]
+    level = 3
+    ext = (d.scale ** level,) * d.dim
+    mask = bb_membership(name, ext, block_n=1024, interpret=True)
+    assert int(mask.sum()) == d.size(level)
+
+
+@pytest.mark.parametrize("name", MSIMPLEX[2:])  # the dim>3 members
+def test_high_dim_membership_kernel(name):
+    d = DOMAINS[name]
+    side = 6
+    ext = (side,) * d.dim
+    mask = bb_membership(name, ext, block_n=1024, interpret=True)
+    # sorted tuples from side values: C(side+m-1, m)
+    assert int(mask.sum()) == math.comb(side + d.dim - 1, d.dim)
+
+
+def test_waste_grows_with_dimension_through_domains():
+    """1 - 1/m! through the Domain accounting (not core/msimplex directly)."""
+    prev = 0.0
+    for m in MSIMPLEX_MS:
+        acc = DOMAINS[f"msimplex{m}"].block_accounting(10**6)
+        assert acc["valid_blocks"] == -(-10**6 // 256)
+        assert acc["waste_fraction"] > prev
+        assert acc["waste_fraction"] == pytest.approx(
+            1.0 - 1.0 / math.factorial(m), abs=0.08)
+        prev = acc["waste_fraction"]
+
+
+def test_bb_block_dims_factorization():
+    assert bb_block_dims(2) == (16, 16)
+    assert bb_block_dims(3) == (8, 8, 4)
+    assert bb_block_dims(4) == (4, 4, 4, 4)
+    assert bb_block_dims(5) == (4, 4, 4, 2, 2)
+    for dim in (2, 3, 4, 5):
+        assert int(np.prod(bb_block_dims(dim))) == 256
+
+
+@pytest.mark.parametrize("name", NEW_DOMAINS)
+def test_deployment_analytics_registry_driven(name):
+    dep = map_deployment_analytics(name, n_points=10**6)
+    assert dep["domain"] == name
+    assert dep["mapped_blocks"] == -(-10**6 // 256)
+    assert dep["bb_blocks"] > dep["mapped_blocks"]
+    assert dep["speedup"] > 1.0 and dep["energy_reduction"] > 1.0
+
+
+def test_unservable_extension_domain_does_not_break_replay_bank():
+    """Registering a domain the mock bank cannot serve must not poison the
+    fingerprint sweep (and with it every derivation's cache key)."""
+    from repro.core.backends import MockLLMBackend
+    from repro.core.domains import DenseTriangularDomain, register_domain
+
+    base_fp = MockLLMBackend("OSS:120b").cache_fingerprint
+    name = "toytri_ext"
+    register_domain(DenseTriangularDomain(name, "Toy Tri", 2, "dense", "O(1)"))
+    try:
+        fp = MockLLMBackend("OSS:120b").cache_fingerprint
+        assert fp == base_fp  # unservable domain contributes no bank content
+    finally:
+        DOMAINS.pop(name, None)
+    assert MockLLMBackend("OSS:120b").cache_fingerprint == base_fp
+
+
+def test_new_domains_flow_through_artifacts(tmp_path):
+    """Derive -> artifact -> kernel deployment for one member per family."""
+    from repro.core.artifact import ArtifactCache
+    from repro.core.backends import MockLLMBackend
+    from repro.core.pipeline import derive_mapping
+    from repro.launch.analytic import artifact_deployment_analytics
+
+    cache = ArtifactCache(tmp_path)
+    for name in ("msimplex5", "vicsek2d"):
+        res = derive_mapping(DOMAINS[name], MockLLMBackend("OSS:120b"), 20,
+                             n_validate=3000, cache=cache)
+        art = res.artifact
+        assert res.perfect and art is not None and art.deployable, name
+        got = map_coordinates(art, 2048, interpret=True)
+        want = REGISTRY.tier(name, None, "numpy")(
+            np.arange(2048, dtype=np.int64))
+        np.testing.assert_array_equal(got, want)
+        dep = artifact_deployment_analytics(art, n_points=10**6)
+        assert dep["runs_to_break_even"] >= 0.0
+        # repeat derivation is a pure cache hit
+        res2 = derive_mapping(DOMAINS[name], MockLLMBackend("OSS:120b"), 20,
+                              n_validate=3000, cache=cache)
+        assert res2.cache_hit and res2.report == res.report
