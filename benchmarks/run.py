@@ -1,15 +1,29 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] \
+        [--json BENCH_serving.json]
 
 Emits one ``name,us_per_call,derived`` CSV row per benchmark (benchmarks
-also print their human-readable tables above the CSV rows).
+also print their human-readable tables above the CSV rows).  ``--json PATH``
+additionally writes a machine-readable report: per-suite rows + wall time +
+artifact-cache hit/miss deltas, and the serving suite's HTTP latency/
+throughput metrics.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _cache_counts():
+    from repro.core.artifact import default_cache
+
+    cache = default_cache()
+    if cache is None:
+        return {"hits": 0, "misses": 0}
+    return {"hits": cache.hits, "misses": cache.misses}
 
 
 def main() -> None:
@@ -17,15 +31,18 @@ def main() -> None:
     p.add_argument("--full", action="store_true",
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
-                   help="accuracy|fig5|dense|fractal|attn")
+                   help="accuracy|fig5|dense|fractal|attn|msimplex|serving")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write a machine-readable per-suite report "
+                        "(e.g. BENCH_serving.json)")
     args = p.parse_args()
 
     n_val = 1_000_000 if args.full else 100_000
     sample = 200 if args.full else 50
 
     from benchmarks import (  # noqa: PLC0415
-        accuracy_tables, attn_kernel, block_dense, block_fractal,
-        energy_efficiency, msimplex_scaling,
+        accuracy_tables, attn_kernel, block_dense, block_fractal, common,
+        energy_efficiency, msimplex_scaling, serving,
     )
 
     t0 = time.time()
@@ -38,10 +55,15 @@ def main() -> None:
         "fractal": block_fractal.run,
         "attn": attn_kernel.run,
         "msimplex": msimplex_scaling.run,
+        "serving": serving.run,
     }
+    report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
+        rows_before = len(common.ROWS)
+        cache_before = _cache_counts()
+        suite_t0 = time.time()
         try:
             fn()
         except Exception as e:  # pragma: no cover
@@ -49,7 +71,31 @@ def main() -> None:
 
             traceback.print_exc()
             failures.append((name, repr(e)))
+        cache_after = _cache_counts()
+        report["suites"][name] = {
+            "seconds": time.time() - suite_t0,
+            "rows": [{"name": row_name, "us_per_call": us, "derived": derived}
+                     for row_name, us, derived in common.ROWS[rows_before:]],
+            "cache_hits": cache_after["hits"] - cache_before["hits"],
+            "cache_misses": cache_after["misses"] - cache_before["misses"],
+            "failed": any(f[0] == name for f in failures),
+        }
+    if "serving" in report["suites"] and serving.LAST_METRICS:
+        report["serving"] = serving.LAST_METRICS
+        # the serving suite runs against its own private store, invisible to
+        # default_cache() — take its hit/miss deltas from the server's own
+        # counters instead
+        store = serving.LAST_METRICS["server"].get("store", {})
+        report["suites"]["serving"]["cache_hits"] = store.get("hits", 0)
+        report["suites"]["serving"]["cache_misses"] = store.get("misses", 0)
+    report["wall_seconds"] = time.time() - t0
+    report["failures"] = failures
+
     print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"[benchmarks] wrote {args.json}")
     if failures:
         print(f"[benchmarks] FAILURES: {failures}")
         sys.exit(1)

@@ -1,0 +1,94 @@
+"""Serving suite: HTTP derive throughput/latency against a local server.
+
+Boots a MappingHTTPServer (mock backend, private temp store) on an
+ephemeral port, then measures the two costs a fleet client actually pays:
+
+  * cold derive — first request for a cell: full pipeline behind HTTP;
+  * hot derive  — repeat request: server-side cache hit, so the number is
+    pure serving overhead (HTTP + JSON + store read);
+  * hot throughput — concurrent clients hammering cached cells.
+
+Run metrics (cache hits, coalescing, p50/p95 from the server's own
+/metrics) land in ``LAST_METRICS`` so ``run.py --json`` can emit them.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import statistics
+import tempfile
+import time
+
+from benchmarks.common import emit, header
+from repro.core.artifact import ArtifactCache
+from repro.core.backends import MockLLMBackend
+from repro.serving import (
+    MappingHTTPServer, MappingService, RemoteMappingService, batching_factory,
+)
+
+MODEL = "OSS:120b"
+#: populated by run(); run.py --json folds this into BENCH_serving.json
+LAST_METRICS: dict = {}
+
+
+def run(n_hot: int = 50, n_clients: int = 8) -> dict:
+    header("serving: HTTP derive latency/throughput (local server)")
+    cache = ArtifactCache(tempfile.mkdtemp(prefix="bench_serving_"))
+    factory = batching_factory(MockLLMBackend, max_batch=8, max_wait=0.005)
+    service = MappingService(cache=cache, backend_factory=factory,
+                             n_validate=20_000, sample_every=10)
+    with MappingHTTPServer(service) as server:
+        client = RemoteMappingService(server.url)
+
+        # cold: one full derivation per domain, behind HTTP
+        cold_us = []
+        for domain in ("tri2d", "gasket2d", "msimplex3"):
+            t0 = time.perf_counter()
+            res = client.derive(domain, MODEL, 100)
+            cold_us.append((time.perf_counter() - t0) * 1e6)
+            assert res.compiled and not res.cache_hit
+        emit("serving_derive_cold", statistics.median(cold_us), "http")
+
+        # hot: repeats are server-side cache hits — serving overhead only
+        hot_us = []
+        for _ in range(n_hot):
+            t0 = time.perf_counter()
+            res = client.derive("tri2d", MODEL, 100)
+            hot_us.append((time.perf_counter() - t0) * 1e6)
+            assert res.cache_hit
+        hot_us.sort()
+        emit("serving_derive_hot_p50", hot_us[len(hot_us) // 2], "http")
+        emit("serving_derive_hot_p95", hot_us[int(len(hot_us) * 0.95)], "http")
+
+        # hot throughput: concurrent clients on cached cells
+        def one_client(_):
+            c = RemoteMappingService(server.url)
+            for _ in range(n_hot // n_clients or 1):
+                assert c.derive("gasket2d", MODEL, 100).cache_hit
+            return c.stats.server_cache_hits
+
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(n_clients) as pool:
+            hits = sum(pool.map(one_client, range(n_clients)))
+        dt = time.perf_counter() - t0
+        emit("serving_derive_hot_throughput", dt / hits * 1e6,
+             f"{hits / dt:.0f}rps")
+
+        metrics = client.metrics()
+    LAST_METRICS.clear()
+    LAST_METRICS.update({
+        "server": metrics,
+        "client_stats": client.stats.as_dict(),
+        "cold_us": cold_us,
+        "hot_p50_us": hot_us[len(hot_us) // 2],
+        "hot_p95_us": hot_us[int(len(hot_us) * 0.95)],
+        "hot_rps": hits / dt,
+    })
+    svc_stats = metrics["service"]
+    print(f"(server: {svc_stats['derivations']} derivations, "
+          f"{svc_stats['cache_hits']} cache hits, "
+          f"hit ratio {svc_stats['cache_hit_ratio']:.2f})")
+    return LAST_METRICS
+
+
+if __name__ == "__main__":
+    run()

@@ -6,51 +6,98 @@ store across clients, so a second client (or a second run of this script)
 performs zero LLM calls and zero re-validation.
 
     PYTHONPATH=src python examples/derive_and_deploy.py [model]
+
+With ``--url`` the same sweep runs against a network server (boot one with
+``python -m repro.launch.serve --serve-maps``): two RemoteMappingService
+clients share the *server's* store, so client 2's whole grid is served from
+the server-side cache — the derivation cost is paid once per fleet, not
+once per machine.
+
+    PYTHONPATH=src python examples/derive_and_deploy.py --url http://127.0.0.1:8000
 """
-import sys
+import argparse
 
 from repro.core.domains import DOMAINS, PAPER_DOMAINS
 from repro.launch.analytic import artifact_deployment_analytics
-from repro.serving import MappingService
 
-model = sys.argv[1] if len(sys.argv) > 1 else "OSS:120b"
 N_DEPLOY = 500_000_000
-names = sorted(d.name for d in PAPER_DOMAINS)
+STAGES = (20, 50, 100)
 
-# client 1: streams the grid (derives on first run, cache-served afterwards)
-svc = MappingService(n_validate=50_000, sample_every=10)
-grid = {}
-for res in svc.run_grid(domains=names, models=[model], stages=(20, 50, 100)):
-    grid[(res.domain, res.model, res.stage)] = res
 
-# client 2: a fresh service over the same store — every cell is a hit
-client2 = MappingService(n_validate=50_000, sample_every=10)
-for res in client2.run_grid(domains=names, models=[model], stages=(20, 50, 100)):
-    pass
+def make_clients(args):
+    """Two independent clients over one store: in-process services sharing
+    the local cache, or remote clients sharing the server's cache."""
+    if args.url:
+        from repro.serving import RemoteMappingService
 
-print(f"model = {model}   (client 1: {svc.stats.derivations} derivations, "
-      f"{svc.stats.cache_hits} cache hits; client 2 shared the store: "
-      f"{client2.stats.cache_hits} hits, {client2.stats.derivations} "
-      f"derivations)\n")
-print(f"{'domain':22s}{'stage':>6s}{'ordered':>9s}{'any':>8s}{'class':>10s}"
-      f"{'speedup':>9s}{'energy x':>9s}")
-for name in names:
-    dom = DOMAINS[name]
-    best = None
-    for stage in (20, 50, 100):
-        res = grid[(name, model, stage)]
-        if best is None or res.report.ordered > best[1].report.ordered:
-            best = (stage, res)
-    stage, res = best
-    art = res.artifact
-    if art is not None and art.deployable:
-        dep = artifact_deployment_analytics(art, N_DEPLOY)
-        sp = f"{dep['speedup']:8.0f}x"
-        ex = f"{dep['energy_reduction']:8.0f}x"
-    else:
-        sp = ex = "      --"
-    print(f"{dom.paper_name:22s}{stage:>6d}{res.report.ordered_pct:>8.1f}%"
-          f"{res.report.any_order_pct:>7.1f}%"
-          f"{str(res.complexity_class):>10s}{sp}{ex}")
-print("\n'--' rows: the model never derived a perfect map (e.g. the paper's "
-      "'Menger limit'); deployment falls back to the bounding-box kernel.")
+        return (RemoteMappingService(args.url),
+                RemoteMappingService(args.url))
+    from repro.serving import MappingService
+
+    return (MappingService(n_validate=50_000, sample_every=10),
+            MappingService(n_validate=50_000, sample_every=10))
+
+
+def client_summary(args, c1, c2) -> str:
+    if args.url:
+        hits = c1.metrics()["service"]["cache_hits"]
+        return (f"client 1: {c1.stats.server_cache_hits} server-side hits; "
+                f"client 2: {c2.stats.server_cache_hits} server-side hits "
+                f"(all {len(STAGES) * len(PAPER_DOMAINS)} cells); server "
+                f"store served {hits} hits total")
+    return (f"client 1: {c1.stats.derivations} derivations, "
+            f"{c1.stats.cache_hits} cache hits; client 2 shared the store: "
+            f"{c2.stats.cache_hits} hits, {c2.stats.derivations} derivations")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("model", nargs="?", default="OSS:120b")
+    p.add_argument("--url", default=None,
+                   help="derivation server URL (e.g. http://127.0.0.1:8000); "
+                        "omit for in-process services")
+    args = p.parse_args()
+    names = sorted(d.name for d in PAPER_DOMAINS)
+
+    client1, client2 = make_clients(args)
+    # client 1: streams the grid (derives on first pass, cache-served after)
+    grid = {}
+    for res in client1.run_grid(domains=names, models=[args.model],
+                                stages=STAGES):
+        grid[(res.domain, res.model, res.stage)] = res
+
+    # client 2: a fresh client over the same store — every cell is a hit
+    second = list(client2.run_grid(domains=names, models=[args.model],
+                                   stages=STAGES))
+    if args.url:
+        assert all(r.cache_hit for r in second), \
+            "client 2 must be served entirely from the server-side cache"
+
+    print(f"model = {args.model}   ({client_summary(args, client1, client2)})\n")
+    print(f"{'domain':22s}{'stage':>6s}{'ordered':>9s}{'any':>8s}{'class':>10s}"
+          f"{'speedup':>9s}{'energy x':>9s}")
+    for name in names:
+        dom = DOMAINS[name]
+        best = None
+        for stage in STAGES:
+            res = grid[(name, args.model, stage)]
+            if best is None or res.report.ordered > best[1].report.ordered:
+                best = (stage, res)
+        stage, res = best
+        art = res.artifact
+        if art is not None and art.deployable:
+            dep = artifact_deployment_analytics(art, N_DEPLOY)
+            sp = f"{dep['speedup']:8.0f}x"
+            ex = f"{dep['energy_reduction']:8.0f}x"
+        else:
+            sp = ex = "      --"
+        print(f"{dom.paper_name:22s}{stage:>6d}{res.report.ordered_pct:>8.1f}%"
+              f"{res.report.any_order_pct:>7.1f}%"
+              f"{str(res.complexity_class):>10s}{sp}{ex}")
+    print("\n'--' rows: the model never derived a perfect map (e.g. the "
+          "paper's 'Menger limit'); deployment falls back to the "
+          "bounding-box kernel.")
+
+
+if __name__ == "__main__":
+    main()

@@ -138,6 +138,47 @@ result_from_record = _result_from_record
 
 
 # ---------------------------------------------------------------------------
+# JSON wire schema (the HTTP serving layer's payloads)
+# ---------------------------------------------------------------------------
+
+#: bumped when the wire payload shape changes; the client refuses a
+#: mismatched server rather than mis-parsing it.
+WIRE_VERSION = 1
+
+
+def wire_from_result(res: DerivationResult) -> dict:
+    """One served cell as a self-describing JSON payload: the derivation
+    record (the exact schema the cache stores) plus the envelope the remote
+    client needs — content address, whether the server resolved it from its
+    store, and the artifact record when the cell is deployable."""
+    art = res.artifact
+    return {
+        "wire": WIRE_VERSION,
+        "key": res.cache_key,
+        "cache_hit": res.cache_hit,
+        "record": _record_from_result(res),
+        "artifact": art.to_record() if art is not None else None,
+    }
+
+
+def result_from_wire(payload: dict, domain: Domain | None = None) -> DerivationResult:
+    """Rehydrate a wire payload into a DerivationResult (the remote client's
+    read path).  The domain object is resolved locally — client and server
+    share the domain registry, and the content address in the payload ties
+    the record to the exact (domain, model, stage, prompt) cell."""
+    if payload.get("wire") != WIRE_VERSION:
+        raise ValueError(
+            f"wire version mismatch: got {payload.get('wire')!r}, "
+            f"want {WIRE_VERSION}")
+    rec = payload["record"]
+    if domain is None:
+        domain = DOMAINS[rec["domain"]]
+    res = _result_from_record(rec, domain, payload["key"])
+    res.cache_hit = bool(payload["cache_hit"])
+    return res
+
+
+# ---------------------------------------------------------------------------
 # Composable stages (one cell = prepare -> inference -> synthesis ->
 # validation; the cache check wraps the whole chain)
 # ---------------------------------------------------------------------------

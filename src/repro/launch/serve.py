@@ -1,31 +1,75 @@
-"""Serving launcher — batched prefill + decode demo.
+"""Serving launcher — the LM demo and the networked mapping service.
+
+LM prefill/decode demo (the original path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --batch 4 --prompt-len 32 --max-new 32
+
+Networked mapping service (HTTP frontend over a MappingService):
+
+    PYTHONPATH=src python -m repro.launch.serve --serve-maps \
+        --backend engine --port 8000 --max-batch 8 --max-wait 0.01
+
+``--backend`` picks the inference backend behind the service: ``mock``
+(paper replay bank), ``engine`` (real prefill/decode on the in-repo smoke
+transformer — see ``core/backends.EngineBackend``), or ``ollama`` (live
+local GGUF models).  Derive requests for the same model are admitted
+through a batching queue (``--max-batch`` / ``--max-wait`` /
+``--max-pending``); same-cell requests coalesce inside the service.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, get_smoke_config
-from repro.models import transformer as T
-from repro.models.common import count_params
-from repro.serving.engine import generate
+def _backend_factory(args):
+    from repro.core import backends
+
+    if args.backend == "mock":
+        return backends.MockLLMBackend
+    if args.backend == "engine":
+        return functools.partial(
+            backends.EngineBackend, arch=args.arch or "yi-6b",
+            max_new_tokens=args.max_new, temperature=args.temperature)
+    if args.backend == "ollama":
+        return backends.OllamaBackend
+    raise ValueError(f"unknown backend {args.backend!r}")
 
 
-def main() -> None:
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=32)
-    p.add_argument("--max-new", type=int, default=32)
-    p.add_argument("--temperature", type=float, default=0.0)
-    args = p.parse_args()
+def serve_maps(args) -> None:
+    """Boot the full stack: backend -> batching queue -> MappingService ->
+    HTTP frontend, then serve until interrupted."""
+    from repro.serving import MappingHTTPServer, MappingService, batching_factory
+
+    factory = batching_factory(
+        _backend_factory(args), max_batch=args.max_batch,
+        max_wait=args.max_wait, max_pending=args.max_pending)
+    service = MappingService(backend_factory=factory,
+                             n_validate=args.n_validate)
+    server = MappingHTTPServer(service, host=args.host, port=args.port)
+    store = "off" if service.cache is None else str(service.cache.root)
+    print(f"mapping service on {server.url}  "
+          f"(backend={args.backend}, store={store})")
+    print("endpoints: POST /v1/derive  GET /v1/artifact/<key>  "
+          "POST /v1/grid  GET /healthz  GET /metrics")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.httpd.server_close()
+
+
+def lm_demo(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import transformer as T
+    from repro.models.common import count_params
+    from repro.serving.engine import generate
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(max_seq=args.prompt_len + args.max_new)
@@ -51,6 +95,43 @@ def main() -> None:
     print(f"generated {res.steps} steps x {args.batch} seqs in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s incl. compile)")
     print("sample:", res.tokens[0, args.prompt_len:args.prompt_len + 16].tolist())
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None,
+                   help="model arch (LM demo; also the engine backend's "
+                        "smoke config, default yi-6b)")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--max-new", type=int, default=32)
+    p.add_argument("--temperature", type=float, default=0.0)
+    # networked mapping service
+    p.add_argument("--serve-maps", action="store_true",
+                   help="serve mapping derivations over HTTP instead of "
+                        "running the LM demo")
+    p.add_argument("--backend", choices=("mock", "engine", "ollama"),
+                   default="mock", help="inference backend for --serve-maps")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8000)
+    p.add_argument("--n-validate", type=int, default=100_000,
+                   help="ground-truth points per served validation")
+    p.add_argument("--max-batch", type=int, default=8,
+                   help="max derive requests per batched backend call")
+    p.add_argument("--max-wait", type=float, default=0.01,
+                   help="seconds the batcher waits to fill a batch")
+    p.add_argument("--max-pending", type=int, default=256,
+                   help="admission queue depth (beyond this: HTTP 503)")
+    args = p.parse_args()
+
+    if args.serve_maps:
+        serve_maps(args)
+    else:
+        if not args.arch:
+            p.error("--arch is required for the LM demo "
+                    "(or pass --serve-maps)")
+        lm_demo(args)
 
 
 if __name__ == "__main__":

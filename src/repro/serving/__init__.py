@@ -1,3 +1,12 @@
-"""Serving layer: the LM prefill/decode engine (``engine``) and the
-concurrency-safe mapping-artifact service (``map_service``)."""
+"""Serving layer: the LM prefill/decode engine (``engine``), the
+concurrency-safe mapping-artifact service (``map_service``), and its
+networked form — HTTP frontend (``http``), remote client (``client``), and
+per-model request batching/admission (``batching``)."""
+from repro.serving.batching import (  # noqa: F401
+    AdmissionError, BatchingBackend, BatchStats, batching_factory,
+)
+from repro.serving.client import (  # noqa: F401
+    ClientStats, RemoteMappingService, RemoteServiceError,
+)
+from repro.serving.http import MappingHTTPServer  # noqa: F401
 from repro.serving.map_service import MappingService, ServiceStats  # noqa: F401

@@ -1,0 +1,235 @@
+"""RemoteMappingService — the client half of the networked serving stack.
+
+Same ``derive`` / ``run_grid`` / ``artifact`` / ``grid`` surface as the
+in-process :class:`~repro.serving.map_service.MappingService`, resolved over
+HTTP against a :mod:`repro.serving.http` server instead of a local pipeline.
+Callers can therefore swap `MappingService()` for
+`RemoteMappingService(url)` without touching anything downstream — results
+rehydrate through the same wire schema the cache stores
+(``pipeline.result_from_wire``), so a remote ``DerivationResult`` carries
+the same artifact, report, and content address a local one would.
+
+Failure policy, in order:
+
+  * transport errors (connection refused / reset / timeout) retry with
+    exponential backoff up to ``retries`` times;
+  * ``503`` (admission shed) is retryable the same way — the server asked
+    us to back off;
+  * other HTTP errors (400/404/500) raise :class:`RemoteServiceError`
+    immediately — retrying a malformed or failing request won't help;
+  * when every attempt fails *and* a ``fallback`` service was provided, the
+    request is served locally (graceful degradation: the client machine
+    re-derives rather than erroring out, at local inference cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import urllib.error
+import urllib.request
+from typing import Callable, Iterable, Iterator, Sequence
+
+from repro.core import pipeline
+from repro.core.artifact import MappingArtifact
+from repro.core.domains import Domain
+from repro.serving.map_service import MappingService
+
+_RETRYABLE_STATUS = (503,)
+
+
+class RemoteServiceError(RuntimeError):
+    """Terminal client-side failure (bad request, server fault, or transport
+    failure with no fallback configured)."""
+
+    def __init__(self, message: str, status: int | None = None):
+        super().__init__(message)
+        self.status = status
+
+
+def _falls_back(e: RemoteServiceError) -> bool:
+    """Only server-absent / server-overloaded failures degrade to the local
+    fallback; a definite HTTP answer (400/404/500) is the server speaking
+    and must surface to the caller."""
+    return e.status is None or e.status in _RETRYABLE_STATUS
+
+
+@dataclasses.dataclass
+class ClientStats:
+    """Client-side counters (the remote complement of ServiceStats)."""
+
+    remote_requests: int = 0   # HTTP calls that returned a result
+    retries: int = 0           # extra attempts after a retryable failure
+    fallbacks: int = 0         # requests served by the local fallback
+    server_cache_hits: int = 0  # results the server marked cache_hit
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RemoteMappingService:
+    """MappingService surface over a remote derivation server."""
+
+    def __init__(
+        self,
+        url: str,
+        timeout: float = 60.0,
+        retries: int = 3,
+        backoff: float = 0.1,
+        fallback: MappingService | Callable[[], MappingService] | None = None,
+    ):
+        self.url = url.rstrip("/")
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff = backoff
+        self.stats = ClientStats()
+        self._fallback = fallback
+        self._fallback_service: MappingService | None = None
+
+    # -- transport ---------------------------------------------------------
+    def _open(self, path: str, body: dict | None = None):
+        data = json.dumps(body).encode() if body is not None else None
+        req = urllib.request.Request(
+            f"{self.url}{path}", data=data,
+            headers={"Content-Type": "application/json"} if data else {},
+        )
+        return urllib.request.urlopen(req, timeout=self.timeout)  # noqa: S310
+
+    def _attempts(self, path: str, body: dict | None):
+        """Yield open responses, retrying transport/503 failures with
+        backoff; raises the terminal error when attempts are exhausted."""
+        last: Exception | None = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                time.sleep(self.backoff * (2 ** (attempt - 1)))
+                self.stats.retries += 1
+            try:
+                return self._open(path, body)
+            except urllib.error.HTTPError as e:
+                if e.code in _RETRYABLE_STATUS:
+                    last = e
+                    continue
+                detail = ""
+                try:
+                    detail = json.loads(e.read()).get("error", "")
+                except Exception:  # noqa: BLE001 — detail is best-effort
+                    pass
+                raise RemoteServiceError(
+                    f"{path} -> HTTP {e.code}: {detail or e.reason}",
+                    status=e.code) from e
+            except (urllib.error.URLError, ConnectionError, TimeoutError,
+                    OSError) as e:
+                last = e
+                continue
+        status = last.code if isinstance(last, urllib.error.HTTPError) else None
+        raise RemoteServiceError(
+            f"{path} unreachable after {self.retries + 1} attempts: {last}",
+            status=status) from last
+
+    def _call_json(self, path: str, body: dict | None = None) -> dict:
+        with self._attempts(path, body) as resp:
+            payload = json.loads(resp.read())
+        self.stats.remote_requests += 1
+        return payload
+
+    # -- fallback ----------------------------------------------------------
+    def _local(self) -> MappingService | None:
+        if self._fallback is None:
+            return None
+        if self._fallback_service is None:
+            fb = self._fallback
+            self._fallback_service = fb() if callable(fb) and not isinstance(
+                fb, MappingService) else fb  # type: ignore[assignment]
+        return self._fallback_service
+
+    # -- MappingService surface --------------------------------------------
+    def derive(self, domain: str | Domain, model: str,
+               stage: int = 100) -> pipeline.DerivationResult:
+        name = domain.name if isinstance(domain, Domain) else domain
+        try:
+            payload = self._call_json(
+                "/v1/derive", {"domain": name, "model": model, "stage": stage})
+        except RemoteServiceError as e:
+            local = self._local()
+            if local is None or not _falls_back(e):
+                raise
+            self.stats.fallbacks += 1
+            return local.derive(domain, model, stage)
+        res = pipeline.result_from_wire(payload)
+        if res.cache_hit:
+            self.stats.server_cache_hits += 1
+        return res
+
+    def artifact(self, domain: str | Domain, model: str,
+                 stage: int = 100) -> MappingArtifact | None:
+        return self.derive(domain, model, stage).artifact
+
+    def fetch_artifact(self, key: str) -> dict:
+        """GET /v1/artifact/<key>: the raw {record, artifact} payload for a
+        content address (no derivation is triggered)."""
+        return self._call_json(f"/v1/artifact/{key}")
+
+    def run_grid(
+        self,
+        domains: Iterable[str | Domain] | None = None,
+        models: Iterable[str] | None = None,
+        stages: Sequence[int] | None = None,
+    ) -> Iterator[pipeline.DerivationResult]:
+        """Streamed sweep: one rehydrated result per NDJSON line, as the
+        server resolves cells."""
+        body = {}
+        if domains is not None:
+            body["domains"] = [d.name if isinstance(d, Domain) else d
+                               for d in domains]
+        if models is not None:
+            body["models"] = list(models)
+        if stages is not None:
+            body["stages"] = list(stages)
+        try:
+            resp = self._attempts("/v1/grid", body)
+        except RemoteServiceError as e:
+            local = self._local()
+            if local is None or not _falls_back(e):
+                raise
+            self.stats.fallbacks += 1
+            yield from local.run_grid(domains, models, stages)
+            return
+        with resp:
+            self.stats.remote_requests += 1
+            while True:
+                # wrap per-line reads so a server dying mid-stream surfaces
+                # as the documented error type, not a raw socket exception
+                try:
+                    raw = resp.readline()
+                except (ConnectionError, TimeoutError, OSError) as e:
+                    raise RemoteServiceError(
+                        f"/v1/grid stream broke mid-sweep: {e}") from e
+                if not raw:
+                    break
+                line = raw.strip()
+                if not line:
+                    continue
+                payload = json.loads(line)
+                if "error" in payload and "record" not in payload:
+                    raise RemoteServiceError(
+                        f"/v1/grid failed mid-stream: {payload['error']}")
+                res = pipeline.result_from_wire(payload)
+                if res.cache_hit:
+                    self.stats.server_cache_hits += 1
+                yield res
+
+    def grid(self, domains=None, models=None, stages=None,
+             ) -> dict[tuple[str, str, int], pipeline.DerivationResult]:
+        return {(r.domain, r.model, r.stage): r
+                for r in self.run_grid(domains, models, stages)}
+
+    # -- server introspection ----------------------------------------------
+    def healthy(self) -> bool:
+        try:
+            return self._call_json("/healthz").get("status") == "ok"
+        except RemoteServiceError:
+            return False
+
+    def metrics(self) -> dict:
+        """The server's /metrics payload (ServiceStats + latency + batching)."""
+        return self._call_json("/metrics")

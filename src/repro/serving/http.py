@@ -1,0 +1,303 @@
+"""HTTP frontend for the MappingService — stdlib only, no new deps.
+
+One derivation server, many cheap clients: the paper's one-time LLM
+derivation cost only amortizes when every later GPU launch shares it, and
+sharing across machines means a network surface.  This module wraps a
+:class:`~repro.serving.map_service.MappingService` in a
+``ThreadingHTTPServer`` speaking JSON:
+
+    POST /v1/derive           {domain, model, stage}  -> wire payload
+    GET  /v1/artifact/<key>   cached derivation record by content address
+    POST /v1/grid             {domains, models, stages} -> NDJSON stream,
+                              one wire payload per resolved cell
+    GET  /healthz             liveness probe
+    GET  /metrics             ServiceStats + per-endpoint latency
+                              percentiles + batching/admission counters
+
+Every thread the server spawns funnels into the *same* service instance, so
+the coalescing table and artifact-store file lock built in PR 2 are exactly
+the concurrency story here too: N concurrent POSTs for one cell still run
+one pipeline.  Payload schemas live in ``core/pipeline.py``
+(``wire_from_result``/``result_from_wire``) so the client rehydrates the
+same record shape the cache stores.  ``AdmissionError`` from the batching
+queue maps to 503 — the server sheds load instead of queueing unboundedly.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.core import pipeline
+from repro.core.domains import DOMAINS
+from repro.serving.batching import AdmissionError, BatchingBackend
+from repro.serving.map_service import MappingService
+
+MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted sample (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+class _EndpointMetrics:
+    """Per-endpoint counters + a bounded latency sample (seconds)."""
+
+    def __init__(self, window: int = 2048):
+        self.requests = 0
+        self.errors = 0
+        self.latencies: collections.deque[float] = collections.deque(
+            maxlen=window)
+
+    def record(self, seconds: float, ok: bool) -> None:
+        self.requests += 1
+        if not ok:
+            self.errors += 1
+        self.latencies.append(seconds)
+
+    def as_dict(self) -> dict:
+        sample = sorted(self.latencies)
+        return {
+            "requests": self.requests,
+            "errors": self.errors,
+            "p50_ms": _percentile(sample, 0.50) * 1e3,
+            "p95_ms": _percentile(sample, 0.95) * 1e3,
+        }
+
+
+class MappingHTTPServer:
+    """The networked face of one MappingService.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port`` /
+    ``.url``).  ``start()`` serves from a daemon thread; ``close()`` shuts
+    the listener down and joins it.  Usable as a context manager."""
+
+    def __init__(self, service: MappingService, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.service = service
+        self._metrics: dict[str, _EndpointMetrics] = {}
+        self._metrics_mu = threading.Lock()
+        handler = _make_handler(self)
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd.daemon_threads = True
+        self.host = host
+        self.port = self.httpd.server_address[1]
+        self._thread: threading.Thread | None = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "MappingHTTPServer":
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="mapping-http", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self.httpd.serve_forever()
+
+    def close(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def __enter__(self) -> "MappingHTTPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- metrics -----------------------------------------------------------
+    def observe(self, endpoint: str, seconds: float, ok: bool) -> None:
+        with self._metrics_mu:
+            em = self._metrics.get(endpoint)
+            if em is None:
+                em = self._metrics[endpoint] = _EndpointMetrics()
+            em.record(seconds, ok)
+
+    def metrics(self) -> dict:
+        """The /metrics payload: one shared ServiceStats view + HTTP-layer
+        latency percentiles + batching queues + store counters."""
+        svc = self.service
+        out = {
+            "service": svc.stats_snapshot().as_dict(),
+            "inflight": svc.inflight_count(),
+            "http": {},
+            "batching": {},
+        }
+        with self._metrics_mu:
+            out["http"] = {name: em.as_dict()
+                           for name, em in self._metrics.items()}
+        for model, backend in svc.backends().items():
+            if isinstance(backend, BatchingBackend):
+                out["batching"][model] = backend.stats.as_dict()
+        if svc.cache is not None:
+            # counters only — sizing the store would glob the whole cache
+            # directory on every scrape
+            out["store"] = {"hits": svc.cache.hits, "misses": svc.cache.misses}
+        return out
+
+
+def _make_handler(server: MappingHTTPServer):
+    class Handler(BaseHTTPRequestHandler):
+        # HTTP/1.0: responses are close-delimited, which is what lets
+        # /v1/grid stream NDJSON without knowing its length up front.
+
+        def log_message(self, fmt, *args):  # quiet by default
+            pass
+
+        # -- plumbing ------------------------------------------------------
+        def _send_json(self, status: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _read_body(self) -> dict:
+            length = int(self.headers.get("Content-Length") or 0)
+            if length > MAX_BODY_BYTES:
+                raise ValueError(f"request body too large ({length} bytes)")
+            raw = self.rfile.read(length) if length else b""
+            if not raw:
+                return {}
+            body = json.loads(raw)
+            if not isinstance(body, dict):
+                raise ValueError("request body must be a JSON object")
+            return body
+
+        def _timed(self, endpoint: str, fn) -> None:
+            t0 = time.monotonic()
+            ok = True
+            try:
+                fn()
+            except (BrokenPipeError, ConnectionResetError):
+                ok = False  # client went away mid-response: nothing to send
+            except AdmissionError as e:
+                ok = False
+                self._send_json(503, {"error": str(e), "retryable": True})
+            except KeyError as e:
+                ok = False
+                self._send_json(404, {"error": f"unknown name: {e}"})
+            except (ValueError, json.JSONDecodeError) as e:
+                ok = False
+                self._send_json(400, {"error": str(e)})
+            except Exception as e:  # noqa: BLE001 — surface, don't kill thread
+                ok = False
+                self._send_json(500, {"error": f"{type(e).__name__}: {e}"})
+            finally:
+                server.observe(endpoint, time.monotonic() - t0, ok)
+
+        # -- endpoints -----------------------------------------------------
+        def do_GET(self) -> None:  # noqa: N802 (http.server API)
+            if self.path == "/healthz":
+                self._timed("healthz", self._healthz)
+            elif self.path == "/metrics":
+                self._timed("metrics", self._metrics)
+            elif self.path.startswith("/v1/artifact/"):
+                self._timed("artifact", self._artifact)
+            else:
+                self._send_json(404, {"error": f"no route {self.path!r}"})
+
+        def do_POST(self) -> None:  # noqa: N802
+            if self.path == "/v1/derive":
+                self._timed("derive", self._derive)
+            elif self.path == "/v1/grid":
+                self._timed("grid", self._grid)
+            else:
+                self._send_json(404, {"error": f"no route {self.path!r}"})
+
+        def _healthz(self) -> None:
+            self._send_json(200, {
+                "status": "ok",
+                "store": server.service.cache is not None,
+                "domains": len(DOMAINS),
+            })
+
+        def _metrics(self) -> None:
+            self._send_json(200, server.metrics())
+
+        def _derive(self) -> None:
+            body = self._read_body()
+            domain = body.get("domain")
+            model = body.get("model")
+            if not isinstance(domain, str) or not isinstance(model, str):
+                raise ValueError("body must carry string 'domain' and 'model'")
+            stage = body.get("stage", 100)
+            if not isinstance(stage, int) or isinstance(stage, bool):
+                raise ValueError("'stage' must be an integer")
+            res = server.service.derive(domain, model, stage)
+            self._send_json(200, pipeline.wire_from_result(res))
+
+        def _artifact(self) -> None:
+            key = self.path[len("/v1/artifact/"):]
+            cache = server.service.cache
+            if cache is None:
+                self._send_json(404, {"error": "server runs without a store "
+                                               "(REPRO_ARTIFACT_CACHE=off)"})
+                return
+            rec = cache.load(key)
+            if rec is None:
+                self._send_json(404, {"error": f"no record for key {key!r}"})
+                return
+            res = pipeline.result_from_record(rec, DOMAINS[rec["domain"]], key)
+            art = res.artifact
+            self._send_json(200, {
+                "key": key,
+                "record": rec,
+                "artifact": art.to_record() if art is not None else None,
+            })
+
+        def _grid(self) -> None:
+            body = self._read_body()
+
+            def names(field):
+                val = body.get(field)
+                if val is None:
+                    return None
+                if not isinstance(val, list):
+                    raise ValueError(f"{field!r} must be a list")
+                return val
+
+            domains, models, stages = (names("domains"), names("models"),
+                                       names("stages"))
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-ndjson")
+            self.end_headers()
+            # stream one line per resolved cell; a mid-stream failure becomes
+            # a terminal error line (headers are already gone)
+            try:
+                for res in server.service.run_grid(domains, models, stages):
+                    line = json.dumps(pipeline.wire_from_result(res)) + "\n"
+                    self.wfile.write(line.encode())
+                    self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                raise
+            except Exception as e:  # noqa: BLE001
+                self.wfile.write(
+                    (json.dumps({"error": f"{type(e).__name__}: {e}"}) +
+                     "\n").encode())
+
+    return Handler
+
+
+def serve(service: MappingService | None = None, host: str = "127.0.0.1",
+          port: int = 8000) -> MappingHTTPServer:
+    """Boot a server in the calling thread (the CLI path)."""
+    server = MappingHTTPServer(service or MappingService(), host, port)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.httpd.server_close()
+    return server

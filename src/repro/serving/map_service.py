@@ -41,15 +41,35 @@ _USE_DEFAULT_CACHE = object()
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Operational counters: where each served request was resolved."""
+    """Operational counters: where each served request was resolved.
 
+    This is the one stats surface shared by the in-process path and the HTTP
+    path — ``MappingService.stats`` mutates it under the service lock, and
+    ``GET /metrics`` publishes a :meth:`snapshot` of the same object, so the
+    two views can never drift."""
+
+    requests: int = 0        # derive() calls admitted (any resolution)
     derivations: int = 0     # pipeline actually ran (this process was leader)
     cache_hits: int = 0      # resolved from the shared artifact store
     coalesced: int = 0       # piggybacked on another thread's in-flight run
+    errors: int = 0          # derive() raised (pipeline/backend/lock failure)
     stale_locks_broken: int = 0
 
+    @property
+    def cache_hit_ratio(self) -> float:
+        """Fraction of admitted requests served without running the pipeline
+        in this thread (store hits + coalesced waits)."""
+        if self.requests == 0:
+            return 0.0
+        return (self.cache_hits + self.coalesced) / self.requests
+
+    def snapshot(self) -> "ServiceStats":
+        return dataclasses.replace(self)
+
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["cache_hit_ratio"] = self.cache_hit_ratio
+        return d
 
 
 class _InFlight:
@@ -130,7 +150,23 @@ class MappingService:
         gt: np.ndarray | Callable[[], np.ndarray] | None = None,
     ) -> pipeline.DerivationResult:
         """Serve one cell: cache -> coalesce -> (locked) pipeline run."""
-        req = self.request(domain, model, stage)
+        try:
+            req = self.request(domain, model, stage)
+        except BaseException:
+            with self._mu:
+                self.stats.requests += 1
+                self.stats.errors += 1
+            raise
+        with self._mu:
+            self.stats.requests += 1
+        try:
+            return self._derive_admitted(req, gt)
+        except BaseException:
+            with self._mu:
+                self.stats.errors += 1
+            raise
+
+    def _derive_admitted(self, req: pipeline.DerivationRequest, gt):
         # lock-free fast path: a published record needs no coordination
         res = self._from_cache(req)
         if res is not None:
@@ -192,6 +228,24 @@ class MappingService:
             with self._mu:
                 self.stats.derivations += 1
             return res
+
+    def backends(self) -> dict[str, LLMBackend]:
+        """The per-model backends built so far (read-only view — the HTTP
+        metrics endpoint reports batching-queue counters from these)."""
+        with self._mu:
+            return dict(self._backends)
+
+    def stats_snapshot(self) -> ServiceStats:
+        """A consistent copy of the counters (safe to serialize while other
+        threads keep serving)."""
+        with self._mu:
+            return self.stats.snapshot()
+
+    def inflight_count(self) -> int:
+        """Cells currently being derived (coalescing table size) — the
+        instantaneous companion to the cumulative ``stats.coalesced``."""
+        with self._mu:
+            return len(self._inflight)
 
     def artifact(self, domain: str | Domain, model: str,
                  stage: int = 100) -> MappingArtifact | None:

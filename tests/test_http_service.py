@@ -1,0 +1,338 @@
+"""Networked mapping service end-to-end: HTTP frontend + remote client +
+batching/admission — concurrent remote clients share one server-side
+derivation and one store, the wire schema round-trips byte-identically, and
+the EngineBackend serves real prefill/decode inference through POST
+/v1/derive."""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import pipeline, synthesis
+from repro.core.artifact import ArtifactCache
+from repro.core.backends import EngineBackend, LLMResponse, MockLLMBackend
+from repro.core.domains import DOMAINS
+from repro.serving import (
+    AdmissionError, BatchingBackend, MappingHTTPServer, MappingService,
+    RemoteMappingService, RemoteServiceError, batching_factory,
+)
+
+MODEL = "OSS:120b"
+
+
+class CountingBackend:
+    """Thread-safe MockLLMBackend wrapper counting `generate` calls, with a
+    small sleep so concurrent requests genuinely overlap."""
+
+    def __init__(self, model: str, delay: float = 0.05):
+        self._inner = MockLLMBackend(model)
+        self.name = self._inner.name
+        self.calls = 0
+        self.delay = delay
+        self._mu = threading.Lock()
+
+    @property
+    def cache_fingerprint(self):
+        return self._inner.cache_fingerprint
+
+    def generate(self, prompt, *, meta):
+        with self._mu:
+            self.calls += 1
+        time.sleep(self.delay)
+        return self._inner.generate(prompt, meta=meta)
+
+
+def shared_factory():
+    bank: dict[str, CountingBackend] = {}
+    mu = threading.Lock()
+
+    def factory(model: str) -> CountingBackend:
+        with mu:
+            if model not in bank:
+                bank[model] = CountingBackend(model)
+            return bank[model]
+
+    factory.bank = bank
+    return factory
+
+
+def make_server(tmp_path, factory, **kw):
+    kw.setdefault("n_validate", 2000)
+    kw.setdefault("sample_every", 1)
+    svc = MappingService(cache=ArtifactCache(tmp_path),
+                         backend_factory=factory, **kw)
+    return MappingHTTPServer(svc)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: two concurrent remote clients, one backend inference
+# ---------------------------------------------------------------------------
+
+
+def test_two_concurrent_clients_one_inference(tmp_path):
+    """Two RemoteMappingService clients racing on one (domain, model, stage):
+    exactly one backend inference, byte-identical artifact records for both,
+    and /metrics reports the coalesced/cached resolution."""
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        out = {}
+        mu = threading.Lock()
+
+        def client(tag):
+            c = RemoteMappingService(server.url)
+            res = c.derive("tri2d", MODEL, 20)
+            with mu:
+                out[tag] = res
+
+        threads = [threading.Thread(target=client, args=(t,)) for t in "ab"]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        assert factory.bank[MODEL].calls == 1  # exactly one inference
+        a, b = out["a"], out["b"]
+        assert a.cache_key == b.cache_key
+        assert a.artifact is not None and b.artifact is not None
+        assert (json.dumps(a.artifact.to_record(), sort_keys=True) ==
+                json.dumps(b.artifact.to_record(), sort_keys=True))
+
+        metrics = RemoteMappingService(server.url).metrics()
+        svc = metrics["service"]
+        assert svc["requests"] == 2
+        assert svc["derivations"] == 1
+        assert svc["coalesced"] + svc["cache_hits"] == 1  # the reported hit
+        assert svc["cache_hit_ratio"] == pytest.approx(0.5)
+        assert metrics["http"]["derive"]["requests"] == 2
+        assert metrics["http"]["derive"]["p95_ms"] > 0
+
+
+def test_engine_backend_served_map_validates(tmp_path):
+    """EngineBackend through POST /v1/derive on a smoke config: real
+    prefill/decode runs server-side, and the returned map passes
+    stage_validation."""
+    def factory(model):
+        return EngineBackend(model, max_new_tokens=4)
+
+    with make_server(tmp_path, factory) as server:
+        client = RemoteMappingService(server.url)
+        res = client.derive("tri2d", MODEL, 20)
+    assert res.compiled and res.source is not None
+    assert res.response.tokens_out == 4  # genuine decode steps
+    # re-validate the served source through the pipeline's own stage
+    req = pipeline.prepare_request(
+        DOMAINS["tri2d"], EngineBackend(MODEL, max_new_tokens=4), 20,
+        n_validate=2000, sample_every=1)
+    assert req.key == res.cache_key  # same content address client-side
+    rep, cls = pipeline.stage_validation(
+        req, synthesis.synthesize(res.source))
+    assert rep.ordered == 1.0
+    assert cls is not None
+
+
+# ---------------------------------------------------------------------------
+# Batching / admission
+# ---------------------------------------------------------------------------
+
+
+class BatchRecorder:
+    """Mock backend exposing generate_batch, recording group sizes."""
+
+    def __init__(self, model: str, delay: float = 0.05):
+        self._inner = MockLLMBackend(model)
+        self.name = model
+        self.batch_sizes = []
+        self.delay = delay
+        self._mu = threading.Lock()
+
+    @property
+    def cache_fingerprint(self):
+        return self._inner.cache_fingerprint
+
+    def generate(self, prompt, *, meta):
+        return self.generate_batch([prompt], [meta])[0]
+
+    def generate_batch(self, prompts, metas):
+        with self._mu:
+            self.batch_sizes.append(len(prompts))
+        time.sleep(self.delay)
+        return [self._inner.generate(p, meta=m)
+                for p, m in zip(prompts, metas)]
+
+
+def test_batching_groups_concurrent_same_model_derives(tmp_path):
+    """Concurrent derive requests for *different* cells on one model are
+    admitted as one batched backend call (coalescing handles same-cell)."""
+    inner = {}
+
+    def base_factory(model):
+        return inner.setdefault(model, BatchRecorder(model))
+
+    factory = batching_factory(base_factory, max_batch=8, max_wait=0.25)
+    svc = MappingService(cache=ArtifactCache(tmp_path),
+                         backend_factory=factory, n_validate=2000,
+                         sample_every=1)
+    with MappingHTTPServer(svc) as server:
+        cells = [("tri2d", 20), ("tri2d", 50), ("gasket2d", 20),
+                 ("gasket2d", 50), ("carpet2d", 20), ("msimplex3", 20)]
+        results = {}
+        mu = threading.Lock()
+
+        def one(domain, stage):
+            res = RemoteMappingService(server.url).derive(domain, MODEL, stage)
+            with mu:
+                results[(domain, stage)] = res
+
+        threads = [threading.Thread(target=one, args=c) for c in cells]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    rec = inner[MODEL]
+    assert sum(rec.batch_sizes) == len(cells)      # every request served
+    assert len(rec.batch_sizes) < len(cells)       # ...in fewer backend calls
+    assert max(rec.batch_sizes) > 1
+    stats = factory.batchers[MODEL].stats
+    assert stats.requests == len(cells)
+    assert stats.max_batch_seen == max(rec.batch_sizes)
+    assert all(r.compiled for r in results.values())
+
+
+def test_admission_queue_sheds_load():
+    """A full admission queue rejects instead of queueing unboundedly."""
+    class Slow:
+        name = MODEL
+
+        def generate(self, prompt, *, meta):
+            time.sleep(0.5)
+            return LLMResponse("x", MODEL, 1, 1, 0.0, 0.0)
+
+    backend = BatchingBackend(Slow(), max_batch=1, max_wait=0.0,
+                              max_pending=1)
+    errors, oks = [], []
+    mu = threading.Lock()
+
+    def caller():
+        try:
+            backend.generate("p", meta={})
+            with mu:
+                oks.append(1)
+        except AdmissionError:
+            with mu:
+                errors.append(1)
+
+    first = threading.Thread(target=caller)
+    first.start()
+    time.sleep(0.15)  # worker is now busy with the first request
+    rest = [threading.Thread(target=caller) for _ in range(4)]
+    for t in rest:
+        t.start()
+    for t in [first, *rest]:
+        t.join()
+    assert errors, "queue never shed load"
+    assert oks, "admitted requests must still complete"
+    assert backend.stats.rejected == len(errors)
+    backend.close()
+
+
+# ---------------------------------------------------------------------------
+# Wire schema + endpoints
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip_preserves_result(tmp_path):
+    svc = MappingService(cache=ArtifactCache(tmp_path),
+                         backend_factory=MockLLMBackend,
+                         n_validate=2000, sample_every=1)
+    res = svc.derive("msimplex3", MODEL, 20)
+    payload = json.loads(json.dumps(pipeline.wire_from_result(res)))
+    back = pipeline.result_from_wire(payload)
+    assert back.cache_key == res.cache_key
+    assert back.source == res.source
+    assert back.report == res.report
+    assert back.domainobj.name == "msimplex3"
+    assert back.artifact.to_record() == res.artifact.to_record()
+    with pytest.raises(ValueError, match="wire version"):
+        pipeline.result_from_wire({**payload, "wire": 999})
+
+
+def test_grid_streams_and_second_client_hits_server_cache(tmp_path):
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        c1 = RemoteMappingService(server.url)
+        first = [(r.domain, r.stage, r.cache_hit)
+                 for r in c1.run_grid(domains=["tri2d", "gasket2d"],
+                                      models=[MODEL], stages=[20, 50])]
+        assert len(first) == 4 and not any(hit for _, _, hit in first)
+        c2 = RemoteMappingService(server.url)
+        grid = c2.grid(domains=["tri2d", "gasket2d"], models=[MODEL],
+                       stages=[20, 50])
+        assert len(grid) == 4
+        assert all(r.cache_hit for r in grid.values())
+        assert c2.stats.server_cache_hits == 4
+        assert factory.bank[MODEL].calls == 4  # nothing re-derived
+
+
+def test_artifact_endpoint_and_error_codes(tmp_path):
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        client = RemoteMappingService(server.url)
+        res = client.derive("tri2d", MODEL, 100)
+        fetched = client.fetch_artifact(res.cache_key)
+        assert fetched["record"]["domain"] == "tri2d"
+        assert fetched["artifact"]["source"] == res.source
+        with pytest.raises(RemoteServiceError) as e404:
+            client.fetch_artifact("no-such-key")
+        assert e404.value.status == 404
+        with pytest.raises(RemoteServiceError) as edom:
+            client.derive("not-a-domain", MODEL, 20)
+        assert edom.value.status == 404
+        with pytest.raises(RemoteServiceError) as ebad:
+            client._call_json("/v1/derive", {"domain": "tri2d"})  # no model
+        assert ebad.value.status == 400
+        assert client.healthy()
+
+
+def test_client_falls_back_to_local_service(tmp_path):
+    """Unreachable server + configured fallback: the request is served
+    locally instead of failing."""
+    local = MappingService(cache=ArtifactCache(tmp_path),
+                           backend_factory=MockLLMBackend,
+                           n_validate=2000, sample_every=1)
+    client = RemoteMappingService("http://127.0.0.1:9", retries=1,
+                                  backoff=0.01, fallback=local)
+    res = client.derive("gasket2d", MODEL, 20)
+    assert res.compiled
+    assert client.stats.fallbacks == 1
+    assert client.stats.retries == 1
+    assert not client.healthy()
+    # grid falls back too, and without a fallback the error surfaces
+    assert len(list(client.run_grid(domains=["gasket2d"], models=[MODEL],
+                                    stages=[20]))) == 1
+    bare = RemoteMappingService("http://127.0.0.1:9", retries=0, backoff=0.01)
+    with pytest.raises(RemoteServiceError):
+        bare.derive("gasket2d", MODEL, 20)
+
+
+def test_service_stats_in_process_path(tmp_path):
+    """The promoted ServiceStats counters on the plain in-process service:
+    requests/errors/cache_hit_ratio move without any HTTP involved."""
+    svc = MappingService(cache=ArtifactCache(tmp_path),
+                         backend_factory=MockLLMBackend,
+                         n_validate=2000, sample_every=1)
+    svc.derive("tri2d", MODEL, 20)
+    svc.derive("tri2d", MODEL, 20)
+    snap = svc.stats_snapshot()
+    assert snap.requests == 2
+    assert snap.derivations == 1 and snap.cache_hits == 1
+    assert snap.cache_hit_ratio == pytest.approx(0.5)
+    assert snap.errors == 0
+    with pytest.raises(ValueError):
+        svc.derive("tri2d", "no-such-model", 20)
+    assert svc.stats.errors == 1 and svc.stats.requests == 3
+    assert svc.inflight_count() == 0
+    d = snap.as_dict()
+    assert set(d) >= {"requests", "derivations", "cache_hits", "coalesced",
+                      "errors", "cache_hit_ratio"}
