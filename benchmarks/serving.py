@@ -1,4 +1,5 @@
-"""Serving suite: HTTP derive throughput/latency against a local server.
+"""Serving suite: HTTP derive throughput/latency against a local server,
+plus store-pressure numbers for the tiered artifact store.
 
 Boots a MappingHTTPServer (mock backend, private temp store) on an
 ephemeral port, then measures the two costs a fleet client actually pays:
@@ -8,8 +9,17 @@ ephemeral port, then measures the two costs a fleet client actually pays:
     pure serving overhead (HTTP + JSON + store read);
   * hot throughput — concurrent clients hammering cached cells.
 
+The store-pressure sub-suite isolates where a hot hit resolves:
+
+  * memory tier — resident rehydrated result: no disk, no JSON, no HTTP;
+  * disk tier   — record read + checksum verify + rehydration per hit;
+  * peer tier   — full HTTP round-trip to a sibling server per hit;
+  * eviction churn — throughput when the disk budget is smaller than the
+    working set, so records evict and re-derive continuously.
+
 Run metrics (cache hits, coalescing, p50/p95 from the server's own
-/metrics) land in ``LAST_METRICS`` so ``run.py --json`` can emit them.
+/metrics, per-tier store counters) land in ``LAST_METRICS`` so ``run.py
+--json`` can emit them.
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ import time
 from benchmarks.common import emit, header
 from repro.core.artifact import ArtifactCache
 from repro.core.backends import MockLLMBackend
+from repro.core.store import DiskStore, PeerStore, TieredStore, build_store
 from repro.serving import (
     MappingHTTPServer, MappingService, RemoteMappingService, batching_factory,
 )
@@ -87,7 +98,93 @@ def run(n_hot: int = 50, n_clients: int = 8) -> dict:
     print(f"(server: {svc_stats['derivations']} derivations, "
           f"{svc_stats['cache_hits']} cache hits, "
           f"hit ratio {svc_stats['cache_hit_ratio']:.2f})")
+    store_pressure()
     return LAST_METRICS
+
+
+def _hot_us(svc, domain: str, n: int) -> list[float]:
+    """Median-friendly per-hit latencies after a warmup request."""
+    svc.derive(domain, MODEL, 100)
+    out = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        res = svc.derive(domain, MODEL, 100)
+        out.append((time.perf_counter() - t0) * 1e6)
+        assert res.cache_hit
+    return out
+
+
+def store_pressure(n_hot: int = 30, n_churn: int = 24) -> dict:
+    """Hot-hit latency per store tier + throughput under eviction churn."""
+    header("serving: store pressure (per-tier hot hits, eviction churn)")
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    kw = dict(n_validate=20_000, sample_every=10)
+
+    # memory tier: resident rehydrated result (the intended steady state)
+    svc_mem = MappingService(store=build_store(root=f"{root}/mem"), **kw)
+    svc_mem.derive("tri2d", MODEL, 100)
+    mem_us = _hot_us(svc_mem, "tri2d", n_hot)
+    assert svc_mem.store.disk.reads <= 2  # hot hits never touched disk
+    emit("store_hot_memory_tier", statistics.median(mem_us), "lru")
+
+    # disk tier: no memory tier, every hit reads + verifies + rehydrates
+    svc_disk = MappingService(
+        store=TieredStore(disk=DiskStore(f"{root}/disk")), **kw)
+    svc_disk.derive("tri2d", MODEL, 100)
+    disk_us = _hot_us(svc_disk, "tri2d", n_hot)
+    emit("store_hot_disk_tier", statistics.median(disk_us), "checksum")
+
+    # peer tier: every hit is an HTTP round-trip to the sibling that holds
+    # the record (a peer-only store has no local tier to promote into)
+    svc_origin = MappingService(store=build_store(root=f"{root}/origin"), **kw)
+    svc_origin.derive("tri2d", MODEL, 100)
+    with MappingHTTPServer(svc_origin) as origin:
+        svc_peer = MappingService(
+            store=TieredStore(peers=PeerStore([origin.url])), **kw)
+        peer_us = _hot_us(svc_peer, "tri2d", n_hot)
+    emit("store_hot_peer_tier", statistics.median(peer_us), "http")
+
+    # eviction churn: working set > disk budget, so serves keep paying
+    # eviction + re-derivation — the worst-case sustained throughput
+    probe = DiskStore(f"{root}/probe")
+    svc_probe = MappingService(store=TieredStore(disk=probe),
+                               n_validate=2000, sample_every=1)
+    rec_bytes = probe.path(
+        svc_probe.derive("tri2d", MODEL, 100).cache_key).stat().st_size
+    churn_store = build_store(root=f"{root}/churn",
+                              max_bytes=int(rec_bytes * 2.5),
+                              memory_entries=2)
+    svc_churn = MappingService(store=churn_store, n_validate=2000,
+                               sample_every=1)
+    cells = [("tri2d", 20), ("tri2d", 50), ("tri2d", 100),
+             ("gasket2d", 20), ("gasket2d", 50), ("gasket2d", 100)]
+    t0 = time.perf_counter()
+    for i in range(n_churn):
+        domain, stage = cells[i % len(cells)]
+        svc_churn.derive(domain, MODEL, stage)
+    dt = time.perf_counter() - t0
+    evicted = (churn_store.disk.evictions_bytes +
+               churn_store.disk.evictions_ttl)
+    emit("store_churn_throughput", dt / n_churn * 1e6,
+         f"{n_churn / dt:.0f}ops")
+
+    pressure = {
+        "memory_p50_us": statistics.median(mem_us),
+        "disk_p50_us": statistics.median(disk_us),
+        "peer_p50_us": statistics.median(peer_us),
+        "churn_ops_per_s": n_churn / dt,
+        "churn_evictions": evicted,
+        "churn_rederivations": svc_churn.stats.derivations,
+        "memory_store_stats": svc_mem.store_stats(),
+        "churn_store_stats": svc_churn.store_stats(),
+    }
+    LAST_METRICS["store_pressure"] = pressure
+    print(f"(tiers p50: memory {pressure['memory_p50_us']:.0f}us, disk "
+          f"{pressure['disk_p50_us']:.0f}us, peer "
+          f"{pressure['peer_p50_us']:.0f}us; churn "
+          f"{pressure['churn_ops_per_s']:.0f}ops/s with {evicted} evictions, "
+          f"{svc_churn.stats.derivations} re-derivations)")
+    return pressure
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@ deployment of exact thread-mapping functions for non-box domains."""
 from repro.core.artifact import (  # noqa: F401
     ArtifactCache, MappingArtifact, cache_key, default_cache,
 )
+from repro.core.store import (  # noqa: F401
+    ArtifactStore, DiskStore, MemoryStore, PeerStore, TieredStore,
+    build_store, default_store,
+)
 from repro.core.domains import DOMAINS, Domain, get_domain  # noqa: F401
 from repro.core.maps import SCALAR_MAPS, VARIANT_MAPS, jnp_map, np_map  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401

@@ -6,42 +6,46 @@ literal: a successful (domain, model, stage) derivation becomes a
 ``MappingArtifact`` — validated source, accuracy report digest, complexity
 class, inference-energy metadata, and a scalar callable rebuilt on demand
 from the validated source.  The pipeline persists each cell (successes and
-NC failures alike) as a JSON derivation record in the content-addressed
-on-disk cache below, so repeated pipeline calls skip inference *and* the
+NC failures alike) as a JSON derivation record in the tiered artifact store
+(``core/store.py``: memory LRU -> checksummed disk with TTL/size eviction
+-> peer replication), so repeated pipeline calls skip inference *and* the
 10^6-point validation entirely; ``MappingArtifact.to_record``/``from_record``
 additionally serialize a standalone artifact for export (e.g. serving a
 shared artifact store).
 
-Cache layout:    <root>/<key>.json            (schema-versioned records)
-Cache root:      $REPRO_ARTIFACT_CACHE, else ~/.cache/repro_thread_maps
-Concurrency:     records publish via atomic rename (readers are lock-free);
-                 writers serialize per key through <root>/<key>.lock
-                 (:class:`FileLock`, with stale-lock recovery) — see
-                 ``serving/map_service.py`` for the many-clients front end
-Key:             sha256 over {domain, model, stage, sha256(prompt),
-                 n_validate, sample_every} — any change to the prompt
-                 template, sampling stage or validation spec changes the key,
-                 which is the cache's only invalidation rule (plus the schema
-                 version stored in each record).
-Opt out:         REPRO_ARTIFACT_CACHE=off  (or "0" / "none")
+Storage:    see :mod:`repro.core.store` — disk root $REPRO_ARTIFACT_CACHE,
+            else ~/.cache/repro_thread_maps; opt out with
+            REPRO_ARTIFACT_CACHE=off (or "0" / "none").
+Key:        sha256 over {domain, model, stage, sha256(prompt), n_validate,
+            sample_every} — any change to the prompt template, sampling
+            stage or validation spec changes the key, which (plus the
+            schema version + checksum in each record) is the entire
+            invalidation story.
+
+``ArtifactCache`` is the historical name of the disk tier; it and the
+locking/keying primitives re-export here so existing imports keep working.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
-import os
-import tempfile
-import threading
 import time
-from pathlib import Path
 from typing import Any, Callable
 
 from repro.core import synthesis, validate
 from repro.core.domains import Domain, get_domain
 from repro.core.registry import REGISTRY, MapRegistry
+from repro.core.store import (  # noqa: F401 — storage layer re-exports
+    SCHEMA_VERSION, ArtifactStore, DiskStore, FileLock, MemoryStore,
+    PeerStore, TieredStore, build_store, cache_key, default_store,
+)
 
-SCHEMA_VERSION = 1
+#: historical name for the disk tier (PR 1..3 call sites and tests)
+ArtifactCache = DiskStore
+
+#: historical name for the process-default store
+default_cache = default_store
 
 #: complexity class -> calibrated logic-class table key (Sec. V.C costs).
 _DENSE_LOGIC = {
@@ -186,241 +190,3 @@ def resolve_spec(spec) -> tuple[str, str | None]:
 
 def resolve_domain(spec) -> str:
     return resolve_spec(spec)[0]
-
-
-# ---------------------------------------------------------------------------
-# File locking — many clients, one artifact store
-# ---------------------------------------------------------------------------
-
-
-class FileLock:
-    """Advisory cross-process lock: an O_CREAT|O_EXCL sentinel file.
-
-    Combined with the cache's atomic-rename publish this makes the store
-    safe for concurrent writers: the lock serializes *derivation* of one key
-    across processes while readers stay lock-free (they only ever see a
-    fully-published record or a miss).
-
-    Ownership: each acquirer writes a unique token into the sentinel.  A
-    heartbeat thread refreshes the sentinel's mtime while held, so only a
-    genuinely crashed holder ever looks stale; a stale lock is broken by
-    atomic rename (exactly one contender wins the break), and ``release``
-    verifies the token so a holder whose lock *was* broken never deletes the
-    next holder's sentinel.  All I/O degrades gracefully — an unwritable
-    store yields an unlocked no-op lock, matching the cache's read-only
-    degradation."""
-
-    def __init__(self, path: str | Path, timeout: float = 30.0,
-                 poll: float = 0.02, stale_seconds: float = 60.0):
-        self.path = Path(path)
-        self.timeout = timeout
-        self.poll = poll
-        self.stale_seconds = stale_seconds
-        self.locked = False
-        self.broke_stale = False
-        self.token = f"{os.getpid()}-{os.urandom(8).hex()}"
-        self._hb_stop: "threading.Event | None" = None
-        self._hb_thread: "threading.Thread | None" = None
-
-    def acquire(self) -> "FileLock":
-        deadline = time.monotonic() + self.timeout
-        while True:
-            created = False
-            try:
-                self.path.parent.mkdir(parents=True, exist_ok=True)
-                fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-                created = True
-                with os.fdopen(fd, "w") as f:
-                    f.write(self.token)
-                self.locked = True
-                self._start_heartbeat()
-                return self
-            except FileExistsError:
-                if self._break_if_stale():
-                    continue
-                if time.monotonic() >= deadline:
-                    raise TimeoutError(
-                        f"lock {self.path} held past {self.timeout}s "
-                        f"(stale threshold {self.stale_seconds}s)")
-                time.sleep(self.poll)
-            except OSError:
-                # unwritable store: proceed unlocked (read-only degradation);
-                # never leave an ownerless sentinel behind if the open
-                # succeeded but the token write failed (e.g. ENOSPC)
-                if created:
-                    try:
-                        self.path.unlink()
-                    except OSError:
-                        pass
-                return self
-
-    def _start_heartbeat(self) -> None:
-        """Refresh the sentinel's mtime while held, so contenders never
-        mistake a long-running live derivation for a crashed holder."""
-        self._hb_stop = stop = threading.Event()
-        interval = max(self.stale_seconds / 4.0, 0.05)
-
-        def beat(path=self.path):
-            while not stop.wait(interval):
-                try:
-                    os.utime(path)
-                except OSError:
-                    return  # lock gone (broken or released) — stop beating
-
-        self._hb_thread = threading.Thread(
-            target=beat, name=f"filelock-hb-{self.path.name}", daemon=True)
-        self._hb_thread.start()
-
-    def _break_if_stale(self) -> bool:
-        try:
-            age = time.time() - self.path.stat().st_mtime
-        except OSError:
-            return True  # holder released between our open and stat
-        if age <= self.stale_seconds:
-            return False
-        # atomic rename: of N contenders observing the same stale sentinel,
-        # exactly one wins the break — the losers see ENOENT and re-contend
-        # without ever touching the winner's fresh lock.
-        grave = self.path.with_name(
-            f"{self.path.name}.stale-{os.urandom(4).hex()}")
-        try:
-            os.replace(self.path, grave)
-        except OSError:
-            return True  # someone else broke or released it first
-        self.broke_stale = True
-        try:
-            grave.unlink()
-        except OSError:
-            pass
-        return True
-
-    def release(self) -> None:
-        if not self.locked:
-            return
-        self.locked = False
-        if self._hb_stop is not None:
-            self._hb_stop.set()
-            self._hb_thread.join()
-        try:
-            if self.path.read_text() == self.token:  # still ours?
-                self.path.unlink()
-        except OSError:
-            pass
-
-    def __enter__(self) -> "FileLock":
-        return self.acquire()
-
-    def __exit__(self, *exc) -> None:
-        self.release()
-
-
-# ---------------------------------------------------------------------------
-# Content-addressed derivation cache
-# ---------------------------------------------------------------------------
-
-
-def cache_key(domain: str, model: str, stage: int, prompt: str,
-              **extra: Any) -> str:
-    """Content address of one derivation cell."""
-    payload = {
-        "domain": domain, "model": model, "stage": stage,
-        "prompt_sha256": hashlib.sha256(prompt.encode()).hexdigest(),
-        **extra,
-    }
-    blob = json.dumps(payload, sort_keys=True).encode()
-    return hashlib.sha256(blob).hexdigest()
-
-
-class ArtifactCache:
-    """Content-addressed on-disk store of derivation records.
-
-    Keys come from :func:`cache_key`; values are JSON records (see
-    ``pipeline.py`` for the record schema).  All I/O degrades gracefully:
-    a read-only or corrupt cache behaves like a miss."""
-
-    def __init__(self, root: str | Path | None = None):
-        if root is None:
-            root = os.environ.get("REPRO_ARTIFACT_CACHE") or (
-                Path.home() / ".cache" / "repro_thread_maps")
-        self.root = Path(root)
-        self.hits = 0
-        self.misses = 0
-
-    def path(self, key: str) -> Path:
-        return self.root / f"{key}.json"
-
-    def lock(self, key: str, timeout: float = 30.0,
-             stale_seconds: float = 60.0) -> FileLock:
-        """Cross-process writer lock for one key (see :class:`FileLock`).
-        Readers never need it — ``store`` publishes via atomic rename."""
-        return FileLock(self.root / f"{key}.lock", timeout=timeout,
-                        stale_seconds=stale_seconds)
-
-    def load(self, key: str) -> dict[str, Any] | None:
-        try:
-            rec = json.loads(self.path(key).read_text())
-        except (OSError, ValueError):
-            self.misses += 1
-            return None
-        if rec.get("schema") != SCHEMA_VERSION:
-            self.misses += 1
-            return None
-        self.hits += 1
-        return rec
-
-    def store(self, key: str, record: dict[str, Any]) -> Path | None:
-        record = {"schema": SCHEMA_VERSION, "key": key, **record}
-        path = self.path(key)
-        tmp = None
-        published = False
-        try:
-            self.root.mkdir(parents=True, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump(record, f, indent=1)
-            os.replace(tmp, path)  # atomic publish
-            published = True
-        except OSError:
-            return None
-        finally:
-            if tmp is not None and not published:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-        return path
-
-    def __contains__(self, key: str) -> bool:
-        return self.path(key).exists()
-
-    def __len__(self) -> int:
-        try:
-            return sum(1 for _ in self.root.glob("*.json"))
-        except OSError:
-            return 0
-
-    def clear(self) -> int:
-        n = 0
-        for p in self.root.glob("*.json"):
-            try:
-                p.unlink()
-                n += 1
-            except OSError:
-                pass
-        return n
-
-
-_DEFAULT_CACHES: dict[str, ArtifactCache] = {}
-
-
-def default_cache() -> ArtifactCache | None:
-    """Process-default cache honoring $REPRO_ARTIFACT_CACHE (opt-out with
-    "off"/"0"/"none").  One instance per resolved root, so hit/miss counters
-    accumulate across calls."""
-    env = os.environ.get("REPRO_ARTIFACT_CACHE", "")
-    if env.strip().lower() in ("off", "0", "none", "disabled"):
-        return None
-    root = env or str(Path.home() / ".cache" / "repro_thread_maps")
-    if root not in _DEFAULT_CACHES:
-        _DEFAULT_CACHES[root] = ArtifactCache(root)
-    return _DEFAULT_CACHES[root]

@@ -32,13 +32,12 @@ from typing import Callable, Iterable, Sequence
 import numpy as np
 
 from repro.core import complexity, energy, synthesis, validate
-from repro.core.artifact import (
-    ArtifactCache, MappingArtifact, cache_key, default_cache, logic_for,
-)
+from repro.core.artifact import MappingArtifact, cache_key, logic_for
 from repro.core.backends import LLMBackend, LLMResponse, build_prompt
 from repro.core.domains import DOMAINS, Domain
+from repro.core.store import ArtifactStore, default_store
 
-_USE_DEFAULT_CACHE = object()  # sentinel: "resolve default_cache() at call"
+_USE_DEFAULT_CACHE = object()  # sentinel: "resolve default_store() at call"
 
 
 @dataclasses.dataclass
@@ -283,16 +282,20 @@ def derive_mapping(
     n_validate: int = 1_000_000,
     gt: np.ndarray | Callable[[], np.ndarray] | None = None,
     sample_every: int = 1,
-    cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
+    cache: ArtifactStore | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
 ) -> DerivationResult:
     """Run the full pipeline for one (domain, model, stage) cell.
 
-    ``cache`` defaults to the process cache (see ``artifact.default_cache``);
-    pass ``cache=None`` to force a live derivation.  ``gt`` may be the
-    ground-truth array or a zero-arg callable producing it — the callable is
-    only invoked on a cache miss, so cached sweeps never enumerate."""
+    ``cache`` accepts any :class:`~repro.core.store.ArtifactStore` and
+    defaults to the process-wide tiered store (``store.default_store()``):
+    library callers and the served path share one memory -> disk -> peer
+    scheme, so a cell derived here is a hot memory hit for the service and
+    vice versa.  Pass ``cache=None`` to force a live derivation.  ``gt``
+    may be the ground-truth array or a zero-arg callable producing it — the
+    callable is only invoked on a cache miss, so cached sweeps never
+    enumerate."""
     if cache is _USE_DEFAULT_CACHE:
-        cache = default_cache()
+        cache = default_store()
     req = prepare_request(domain, backend, stage, n_validate, sample_every)
     if cache is not None:
         rec = cache.load(req.key)
@@ -317,7 +320,7 @@ def run_grid(
     backend_factory: Callable[[str], LLMBackend] | None = None,
     n_validate: int = 100_000,
     sample_every: int = 50,
-    cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
+    cache: ArtifactStore | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
     progress: Callable[[DerivationResult], None] | None = None,
 ) -> dict[tuple[str, str, int], DerivationResult]:
     """Sweep every (domain x model x stage) cell through the artifact cache.
@@ -335,7 +338,7 @@ def run_grid(
     stages = list(stages) if stages is not None else list(pt.STAGES)
     backend_factory = backend_factory or MockLLMBackend
     if cache is _USE_DEFAULT_CACHE:
-        cache = default_cache()
+        cache = default_store()
 
     out: dict[tuple[str, str, int], DerivationResult] = {}
     for dom_name in domains:

@@ -38,6 +38,26 @@ def _backend_factory(args):
     raise ValueError(f"unknown backend {args.backend!r}")
 
 
+def _store_from_args(args):
+    """Assemble the tiered store from the CLI knobs, falling back to the
+    documented env surface (REPRO_STORE_TTL / REPRO_STORE_MAX_BYTES /
+    REPRO_MEMORY_ENTRIES / REPRO_PEERS) for any flag left unset — the
+    flag/env pairs in the README stay equivalent.  None = store off,
+    coalescing-only degradation."""
+    from repro.core.store import build_store, env_knobs, split_peers
+
+    knobs = env_knobs()
+    if args.store_ttl is not None:
+        knobs["ttl_seconds"] = args.store_ttl
+    if args.store_max_bytes is not None:
+        knobs["max_bytes"] = args.store_max_bytes
+    if args.memory_entries is not None:
+        knobs["memory_entries"] = args.memory_entries
+    if args.peers is not None:
+        knobs["peers"] = split_peers(args.peers)
+    return build_store(**knobs)
+
+
 def serve_maps(args) -> None:
     """Boot the full stack: backend -> batching queue -> MappingService ->
     HTTP frontend, then serve until interrupted."""
@@ -46,14 +66,25 @@ def serve_maps(args) -> None:
     factory = batching_factory(
         _backend_factory(args), max_batch=args.max_batch,
         max_wait=args.max_wait, max_pending=args.max_pending)
-    service = MappingService(backend_factory=factory,
+    service = MappingService(store=_store_from_args(args),
+                             backend_factory=factory,
                              n_validate=args.n_validate)
     server = MappingHTTPServer(service, host=args.host, port=args.port)
-    store = "off" if service.cache is None else str(service.cache.root)
+    store = service.store
+    if store is None:
+        desc = "off"
+    else:
+        mem = store.memory.max_entries if store.memory is not None else 0
+        peers = store.peer.peers if store.peer is not None else []
+        desc = (f"{store.root} (memory={mem} entries, "
+                f"ttl={store.disk.ttl_seconds}, "
+                f"max_bytes={store.disk.max_bytes}, "
+                f"peers={peers or 'none'})")
     print(f"mapping service on {server.url}  "
-          f"(backend={args.backend}, store={store})")
-    print("endpoints: POST /v1/derive  GET /v1/artifact/<key>  "
-          "POST /v1/grid  GET /healthz  GET /metrics")
+          f"(backend={args.backend}, store={desc})")
+    print("endpoints: POST /v1/derive  GET|DELETE /v1/artifact/<key>  "
+          "POST /v1/grid  GET /v1/store/stats  GET|POST /v1/replicate/<key>  "
+          "GET /healthz  GET /metrics")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -123,6 +154,19 @@ def main() -> None:
                    help="seconds the batcher waits to fill a batch")
     p.add_argument("--max-pending", type=int, default=256,
                    help="admission queue depth (beyond this: HTTP 503)")
+    # artifact-store lifecycle (see core/store.py)
+    p.add_argument("--store-ttl", type=float, default=None, metavar="SECONDS",
+                   help="evict records idle longer than this (default: never)")
+    p.add_argument("--store-max-bytes", type=int, default=None,
+                   metavar="BYTES",
+                   help="disk budget; least-recently-accessed records are "
+                        "evicted past it (default: unbounded)")
+    p.add_argument("--memory-entries", type=int, default=None,
+                   help="LRU hot-tier capacity in records (0 disables the "
+                        "memory tier; default 256)")
+    p.add_argument("--peers", default=None, metavar="URL[,URL...]",
+                   help="sibling mapping servers to replicate with "
+                        "(read-through on miss, write-back on publish)")
     args = p.parse_args()
 
     if args.serve_maps:

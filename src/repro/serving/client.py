@@ -87,15 +87,17 @@ class RemoteMappingService:
         self._fallback_service: MappingService | None = None
 
     # -- transport ---------------------------------------------------------
-    def _open(self, path: str, body: dict | None = None):
+    def _open(self, path: str, body: dict | None = None,
+              method: str | None = None):
         data = json.dumps(body).encode() if body is not None else None
         req = urllib.request.Request(
-            f"{self.url}{path}", data=data,
+            f"{self.url}{path}", data=data, method=method,
             headers={"Content-Type": "application/json"} if data else {},
         )
         return urllib.request.urlopen(req, timeout=self.timeout)  # noqa: S310
 
-    def _attempts(self, path: str, body: dict | None):
+    def _attempts(self, path: str, body: dict | None,
+                  method: str | None = None):
         """Yield open responses, retrying transport/503 failures with
         backoff; raises the terminal error when attempts are exhausted."""
         last: Exception | None = None
@@ -104,7 +106,7 @@ class RemoteMappingService:
                 time.sleep(self.backoff * (2 ** (attempt - 1)))
                 self.stats.retries += 1
             try:
-                return self._open(path, body)
+                return self._open(path, body, method)
             except urllib.error.HTTPError as e:
                 if e.code in _RETRYABLE_STATUS:
                     last = e
@@ -126,8 +128,9 @@ class RemoteMappingService:
             f"{path} unreachable after {self.retries + 1} attempts: {last}",
             status=status) from last
 
-    def _call_json(self, path: str, body: dict | None = None) -> dict:
-        with self._attempts(path, body) as resp:
+    def _call_json(self, path: str, body: dict | None = None,
+                   method: str | None = None) -> dict:
+        with self._attempts(path, body, method) as resp:
             payload = json.loads(resp.read())
         self.stats.remote_requests += 1
         return payload
@@ -168,6 +171,20 @@ class RemoteMappingService:
         """GET /v1/artifact/<key>: the raw {record, artifact} payload for a
         content address (no derivation is triggered)."""
         return self._call_json(f"/v1/artifact/{key}")
+
+    def delete_artifact(self, key: str) -> dict:
+        """DELETE /v1/artifact/<key>: drop one record from the server's
+        local tiers (per-node ops action; peers keep their copies)."""
+        return self._call_json(f"/v1/artifact/{key}", method="DELETE")
+
+    def pull_record(self, key: str) -> dict:
+        """GET /v1/replicate/<key>: the raw local record (the same surface
+        PeerStore reads — memory/disk only, no peer recursion server-side)."""
+        return self._call_json(f"/v1/replicate/{key}")
+
+    def store_stats(self) -> dict:
+        """GET /v1/store/stats: per-tier counters + disk usage."""
+        return self._call_json("/v1/store/stats")
 
     def run_grid(
         self,

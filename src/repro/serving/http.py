@@ -6,21 +6,32 @@ sharing across machines means a network surface.  This module wraps a
 :class:`~repro.serving.map_service.MappingService` in a
 ``ThreadingHTTPServer`` speaking JSON:
 
-    POST /v1/derive           {domain, model, stage}  -> wire payload
-    GET  /v1/artifact/<key>   cached derivation record by content address
-    POST /v1/grid             {domains, models, stages} -> NDJSON stream,
-                              one wire payload per resolved cell
-    GET  /healthz             liveness probe
-    GET  /metrics             ServiceStats + per-endpoint latency
-                              percentiles + batching/admission counters
+    POST   /v1/derive           {domain, model, stage}  -> wire payload
+    GET    /v1/artifact/<key>   cached derivation record by content address
+    DELETE /v1/artifact/<key>   drop one record from this node's tiers
+    POST   /v1/grid             {domains, models, stages} -> NDJSON stream,
+                                one wire payload per resolved cell
+    GET    /v1/store/stats      per-tier store counters + disk usage
+    GET    /v1/replicate/<key>  replication pull: the raw local record
+                                (memory/disk only — a peer's question never
+                                triggers our own peer fetch)
+    POST   /v1/replicate/<key>  replication push: store a record published
+                                by a sibling server into the local tiers
+    GET    /healthz             liveness probe
+    GET    /metrics             ServiceStats + per-endpoint latency
+                                percentiles + batching/admission counters +
+                                per-tier store counters
 
 Every thread the server spawns funnels into the *same* service instance, so
 the coalescing table and artifact-store file lock built in PR 2 are exactly
 the concurrency story here too: N concurrent POSTs for one cell still run
 one pipeline.  Payload schemas live in ``core/pipeline.py``
 (``wire_from_result``/``result_from_wire``) so the client rehydrates the
-same record shape the cache stores.  ``AdmissionError`` from the batching
+same record shape the store holds.  ``AdmissionError`` from the batching
 queue maps to 503 — the server sheds load instead of queueing unboundedly.
+The two /v1/replicate endpoints are the wire surface of
+:class:`~repro.core.store.PeerStore` — point two servers at each other with
+``--peers`` and a derivation on either is a hit on both.
 """
 from __future__ import annotations
 
@@ -31,6 +42,7 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.core import pipeline
+from repro.core import store as store_mod
 from repro.core.domains import DOMAINS
 from repro.serving.batching import AdmissionError, BatchingBackend
 from repro.serving.map_service import MappingService
@@ -125,7 +137,7 @@ class MappingHTTPServer:
 
     def metrics(self) -> dict:
         """The /metrics payload: one shared ServiceStats view + HTTP-layer
-        latency percentiles + batching queues + store counters."""
+        latency percentiles + batching queues + per-tier store counters."""
         svc = self.service
         out = {
             "service": svc.stats_snapshot().as_dict(),
@@ -139,10 +151,12 @@ class MappingHTTPServer:
         for model, backend in svc.backends().items():
             if isinstance(backend, BatchingBackend):
                 out["batching"][model] = backend.stats.as_dict()
-        if svc.cache is not None:
-            # counters only — sizing the store would glob the whole cache
-            # directory on every scrape
-            out["store"] = {"hits": svc.cache.hits, "misses": svc.cache.misses}
+        if svc.store is not None:
+            # counters only — sizing the store (a directory glob) is the
+            # explicit /v1/store/stats endpoint, not the scrape path
+            out["store"] = {"hits": svc.store.hits,
+                            "misses": svc.store.misses,
+                            "tiers": svc.store.stats()}
         return out
 
 
@@ -203,8 +217,12 @@ def _make_handler(server: MappingHTTPServer):
                 self._timed("healthz", self._healthz)
             elif self.path == "/metrics":
                 self._timed("metrics", self._metrics)
+            elif self.path == "/v1/store/stats":
+                self._timed("store_stats", self._store_stats)
             elif self.path.startswith("/v1/artifact/"):
                 self._timed("artifact", self._artifact)
+            elif self.path.startswith("/v1/replicate/"):
+                self._timed("replicate_pull", self._replicate_pull)
             else:
                 self._send_json(404, {"error": f"no route {self.path!r}"})
 
@@ -213,18 +231,37 @@ def _make_handler(server: MappingHTTPServer):
                 self._timed("derive", self._derive)
             elif self.path == "/v1/grid":
                 self._timed("grid", self._grid)
+            elif self.path.startswith("/v1/replicate/"):
+                self._timed("replicate_push", self._replicate_push)
+            else:
+                self._send_json(404, {"error": f"no route {self.path!r}"})
+
+        def do_DELETE(self) -> None:  # noqa: N802
+            if self.path.startswith("/v1/artifact/"):
+                self._timed("artifact_delete", self._artifact_delete)
             else:
                 self._send_json(404, {"error": f"no route {self.path!r}"})
 
         def _healthz(self) -> None:
+            store = server.service.store
+            peers = getattr(getattr(store, "peer", None), "peers", [])
             self._send_json(200, {
                 "status": "ok",
-                "store": server.service.cache is not None,
+                "store": store is not None,
+                "peers": len(peers),
                 "domains": len(DOMAINS),
             })
 
         def _metrics(self) -> None:
             self._send_json(200, server.metrics())
+
+        def _store_stats(self) -> None:
+            store = server.service.store
+            if store is None:
+                self._send_json(200, {"store": None})
+                return
+            payload = {"store": store.stats(), "usage": store.usage()}
+            self._send_json(200, payload)
 
         def _derive(self) -> None:
             body = self._read_body()
@@ -240,14 +277,16 @@ def _make_handler(server: MappingHTTPServer):
 
         def _artifact(self) -> None:
             key = self.path[len("/v1/artifact/"):]
-            cache = server.service.cache
-            if cache is None:
+            store = server.service.store
+            if store is None:
                 self._send_json(404, {"error": "server runs without a store "
-                                               "(REPRO_ARTIFACT_CACHE=off)"})
+                                               "(REPRO_ARTIFACT_CACHE=off)",
+                                      "key": key})
                 return
-            rec = cache.load(key)
+            rec = store.load(key)
             if rec is None:
-                self._send_json(404, {"error": f"no record for key {key!r}"})
+                self._send_json(404, {"error": f"no record for key {key!r}",
+                                      "key": key})
                 return
             res = pipeline.result_from_record(rec, DOMAINS[rec["domain"]], key)
             art = res.artifact
@@ -256,6 +295,59 @@ def _make_handler(server: MappingHTTPServer):
                 "record": rec,
                 "artifact": art.to_record() if art is not None else None,
             })
+
+        def _artifact_delete(self) -> None:
+            key = self.path[len("/v1/artifact/"):]
+            store = server.service.store
+            if store is None:
+                self._send_json(404, {"error": "server runs without a store "
+                                               "(REPRO_ARTIFACT_CACHE=off)",
+                                      "key": key})
+                return
+            if store.delete(key):
+                self._send_json(200, {"key": key, "deleted": True})
+            else:
+                self._send_json(404, {"error": f"no record for key {key!r}",
+                                      "key": key})
+
+        def _replicate_pull(self) -> None:
+            """The raw local record for a sibling server's PeerStore.
+            Local tiers only — peers asking each other can never recurse."""
+            key = self.path[len("/v1/replicate/"):]
+            store = server.service.store
+            rec = store.load_local(key) if store is not None else None
+            if rec is None:
+                self._send_json(404, {"error": f"no record for key {key!r}",
+                                      "key": key})
+                return
+            self._send_json(200, rec)
+
+        def _replicate_push(self) -> None:
+            """Accept a record a sibling just published (its write-back).
+            Stored into the local tiers only — no push echo back out.  The
+            envelope is verified before anything lands: a mismatched or
+            missing checksum is a 400, same bytes DiskStore would
+            quarantine on read — corruption must not enter via the wire."""
+            key = self.path[len("/v1/replicate/"):]
+            store = server.service.store
+            if store is None:
+                self._send_json(404, {"error": "server runs without a store "
+                                               "(REPRO_ARTIFACT_CACHE=off)",
+                                      "key": key})
+                return
+            rec = self._read_body()
+            if not rec or "domain" not in rec:
+                raise ValueError("replication push body must be a derivation "
+                                 "record (JSON object with 'domain')")
+            if (rec.get("schema") != store_mod.SCHEMA_VERSION
+                    or rec.get("key") != key
+                    or rec.get("checksum") != store_mod.record_checksum(rec)):
+                raise ValueError(
+                    "replication push rejected: record envelope must carry "
+                    f"schema {store_mod.SCHEMA_VERSION}, the URL key, and a "
+                    "matching payload checksum")
+            store.store_local(key, rec)
+            self._send_json(200, {"key": key, "stored": True})
 
         def _grid(self) -> None:
             body = self._read_body()

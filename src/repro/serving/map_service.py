@@ -22,6 +22,13 @@ local ``derive_mapping`` path share one content-address scheme by
 construction.  ``REPRO_ARTIFACT_CACHE=off`` degrades the service to
 coalescing-only: concurrent requests for one cell still share a single
 derivation, but nothing persists, so sequential repeats re-derive.
+
+Storage is the tiered :class:`~repro.core.store.TieredStore` (memory LRU ->
+checksummed disk with TTL/size eviction -> peer replication): a hot hit
+resolves from the memory tier with no disk read and no JSON parse, and once
+a result has been rehydrated it is remembered on the entry so repeats skip
+dataclass reconstruction too.  A bare disk-level store passed as ``store=``
+(or the legacy ``cache=``) gains a memory tier automatically.
 """
 from __future__ import annotations
 
@@ -32,9 +39,10 @@ from typing import Callable, Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core import pipeline
-from repro.core.artifact import ArtifactCache, MappingArtifact, default_cache
+from repro.core.artifact import MappingArtifact
 from repro.core.backends import LLMBackend, MockLLMBackend
 from repro.core.domains import DOMAINS, Domain
+from repro.core.store import ArtifactStore, as_tiered, default_store
 
 _USE_DEFAULT_CACHE = object()
 
@@ -93,20 +101,27 @@ class MappingService:
 
     def __init__(
         self,
-        cache: ArtifactCache | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
+        store: ArtifactStore | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
         backend_factory: Callable[[str], LLMBackend] = MockLLMBackend,
         n_validate: int = 100_000,
         sample_every: int = 50,
         lock_timeout: float = 300.0,
         stale_lock_seconds: float = 60.0,
+        memory_entries: int = 256,
+        cache: ArtifactStore | None = _USE_DEFAULT_CACHE,  # type: ignore[assignment]
     ):
         # lock_timeout bounds how long a follower process waits on a *live*
         # leader (whose heartbeat keeps the lock fresh) — it must comfortably
         # exceed a worst-case derivation, not a worst-case crash
         # (stale_lock_seconds covers crashes).
-        if cache is _USE_DEFAULT_CACHE:
-            cache = default_cache()
-        self.cache = cache
+        if store is _USE_DEFAULT_CACHE:
+            store = cache  # legacy keyword (PR 1..3 call sites)
+        if store is _USE_DEFAULT_CACHE:
+            store = default_store()
+        # normalize to the tiered shape: a bare disk store gains a memory
+        # hot tier, an existing TieredStore is used as-is, None stays None
+        # (coalescing-only degradation)
+        self.store = as_tiered(store, memory_entries)
         self.backend_factory = backend_factory
         self.n_validate = n_validate
         self.sample_every = sample_every
@@ -116,6 +131,11 @@ class MappingService:
         self._backends: dict[str, LLMBackend] = {}
         self._inflight: dict[str, _InFlight] = {}
         self._mu = threading.Lock()
+
+    @property
+    def cache(self):
+        """Legacy name for :attr:`store` (kept for PR 1..3 call sites)."""
+        return self.store
 
     # -- request identity --------------------------------------------------
     def _backend(self, model: str) -> LLMBackend:
@@ -197,24 +217,32 @@ class MappingService:
             fl.event.set()
 
     def _from_cache(self, req: pipeline.DerivationRequest):
-        if self.cache is None:
+        if self.store is None:
             return None
-        rec = self.cache.load(req.key)
-        if rec is None:
-            return None
+        # hottest path: a previously-rehydrated result resident in the
+        # memory tier — no disk read, no JSON parse, no reconstruction
+        res = self.store.load_result(req.key)
+        if res is None:
+            rec = self.store.load(req.key)
+            if rec is None:
+                return None
+            res = pipeline.result_from_record(rec, req.domain, req.key)
+            # rehydrated results carry cache_hit=True, so remembering one
+            # (never a fresh derivation) keeps repeat serves truthful
+            self.store.remember_result(req.key, res)
         with self._mu:
             self.stats.cache_hits += 1
-        return pipeline.result_from_record(rec, req.domain, req.key)
+        return res
 
     def _derive_locked(self, req: pipeline.DerivationRequest, gt):
         """Leader path: under the store's per-key file lock, re-check the
-        cache (another process may have published while we waited), then run
+        store (another process may have published while we waited), then run
         the pipeline stages and publish atomically."""
-        if self.cache is None:
+        if self.store is None:
             with self._mu:
                 self.stats.derivations += 1
             return pipeline.run_stages(req, gt)
-        lock = self.cache.lock(req.key, timeout=self.lock_timeout,
+        lock = self.store.lock(req.key, timeout=self.lock_timeout,
                                stale_seconds=self.stale_lock_seconds)
         with lock:
             if lock.broke_stale:
@@ -224,7 +252,7 @@ class MappingService:
             if res is not None:
                 return res
             res = pipeline.run_stages(req, gt)
-            self.cache.store(req.key, pipeline.record_from_result(res))
+            self.store.store(req.key, pipeline.record_from_result(res))
             with self._mu:
                 self.stats.derivations += 1
             return res
@@ -246,6 +274,11 @@ class MappingService:
         instantaneous companion to the cumulative ``stats.coalesced``."""
         with self._mu:
             return len(self._inflight)
+
+    def store_stats(self) -> dict | None:
+        """Per-tier store counters (memory/disk/peer hits, evictions,
+        migrations, quarantines) — None when running store-less."""
+        return self.store.stats() if self.store is not None else None
 
     def artifact(self, domain: str | Domain, model: str,
                  stage: int = 100) -> MappingArtifact | None:

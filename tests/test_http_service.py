@@ -1,11 +1,14 @@
 """Networked mapping service end-to-end: HTTP frontend + remote client +
 batching/admission — concurrent remote clients share one server-side
-derivation and one store, the wire schema round-trips byte-identically, and
-the EngineBackend serves real prefill/decode inference through POST
-/v1/derive."""
+derivation and one store, the wire schema round-trips byte-identically, the
+EngineBackend serves real prefill/decode inference through POST /v1/derive,
+and two servers with disjoint local stores replicate derivations through
+the peer tier (one backend inference for the whole fleet)."""
 import json
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import pytest
 
@@ -13,6 +16,7 @@ from repro.core import pipeline, synthesis
 from repro.core.artifact import ArtifactCache
 from repro.core.backends import EngineBackend, LLMResponse, MockLLMBackend
 from repro.core.domains import DOMAINS
+from repro.core.store import PeerStore, build_store
 from repro.serving import (
     AdmissionError, BatchingBackend, MappingHTTPServer, MappingService,
     RemoteMappingService, RemoteServiceError, batching_factory,
@@ -273,6 +277,175 @@ def test_grid_streams_and_second_client_hits_server_cache(tmp_path):
         assert all(r.cache_hit for r in grid.values())
         assert c2.stats.server_cache_hits == 4
         assert factory.bank[MODEL].calls == 4  # nothing re-derived
+
+
+def test_artifact_miss_is_structured_json(tmp_path):
+    """GET /v1/artifact/<key> misses answer with a JSON error body carrying
+    the key, under the JSON content type — same envelope as every other
+    endpoint, so clients never special-case the miss path."""
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        with pytest.raises(urllib.error.HTTPError) as err:
+            urllib.request.urlopen(f"{server.url}/v1/artifact/deadbeef")
+        e = err.value
+        assert e.code == 404
+        assert e.headers.get("Content-Type") == "application/json"
+        body = json.loads(e.read())
+        assert body["key"] == "deadbeef"
+        assert "deadbeef" in body["error"]
+
+
+def test_store_stats_and_delete_endpoints(tmp_path):
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        client = RemoteMappingService(server.url)
+        res = client.derive("tri2d", MODEL, 20)
+
+        stats = client.store_stats()
+        assert stats["store"]["memory"]["entries"] == 1
+        assert stats["usage"]["records"] == 1 and stats["usage"]["bytes"] > 0
+
+        deleted = client.delete_artifact(res.cache_key)
+        assert deleted == {"key": res.cache_key, "deleted": True}
+        assert client.store_stats()["usage"]["records"] == 0
+        with pytest.raises(RemoteServiceError) as gone:
+            client.delete_artifact(res.cache_key)  # idempotent via 404
+        assert gone.value.status == 404
+        with pytest.raises(RemoteServiceError) as miss:
+            client.fetch_artifact(res.cache_key)
+        assert miss.value.status == 404
+        # the cell re-derives rather than serving the deleted record
+        again = client.derive("tri2d", MODEL, 20)
+        assert not again.cache_hit
+        assert factory.bank[MODEL].calls == 2
+
+
+# ---------------------------------------------------------------------------
+# Peer replication: two servers, disjoint local stores, one inference
+# ---------------------------------------------------------------------------
+
+
+def two_servers(tmp_path, factory):
+    """A <-> B with disjoint local stores and mutual peer wiring.  B's peer
+    tier is wired at construction; A's is attached after B boots (ports are
+    ephemeral, so somebody has to go second)."""
+    store_a = build_store(root=tmp_path / "a")
+    svc_a = MappingService(store=store_a, backend_factory=factory,
+                           n_validate=2000, sample_every=1)
+    srv_a = MappingHTTPServer(svc_a).start()
+    store_b = build_store(root=tmp_path / "b", peers=[srv_a.url])
+    svc_b = MappingService(store=store_b, backend_factory=factory,
+                           n_validate=2000, sample_every=1)
+    srv_b = MappingHTTPServer(svc_b).start()
+    store_a.peer = PeerStore([srv_b.url])
+    return srv_a, srv_b
+
+
+def test_two_servers_one_inference_acceptance(tmp_path):
+    """The acceptance scenario: derive on A, hit from B — one backend
+    inference total across the fleet, verified by both servers' stats; and
+    B's repeat is a memory-tier hit with zero disk reads."""
+    factory = shared_factory()
+    srv_a, srv_b = two_servers(tmp_path, factory)
+    try:
+        res_a = RemoteMappingService(srv_a.url).derive("carpet2d", MODEL, 100)
+        assert not res_a.cache_hit
+
+        # write-back: A pushed its publish to B's local tiers already
+        store_b = srv_b.service.store
+        assert store_b.load_local(res_a.cache_key) is not None
+        assert store_b.disk.path(res_a.cache_key).exists()
+
+        client_b = RemoteMappingService(srv_b.url)
+        res_b = client_b.derive("carpet2d", MODEL, 100)
+        assert res_b.cache_hit
+        assert res_b.source == res_a.source
+        assert factory.bank[MODEL].calls == 1          # ONE inference total
+        assert srv_b.service.stats.derivations == 0    # B never ran a pipeline
+
+        # hot repeat on B: memory tier, no disk read
+        reads = store_b.disk.reads
+        assert client_b.derive("carpet2d", MODEL, 100).cache_hit
+        assert store_b.disk.reads == reads
+
+        metrics = client_b.metrics()
+        assert metrics["service"]["derivations"] == 0
+        assert metrics["service"]["cache_hits"] >= 2
+        assert metrics["store"]["tiers"]["memory"]["hits"] >= 1
+    finally:
+        srv_a.close()
+        srv_b.close()
+
+
+def test_peer_read_through_after_local_delete(tmp_path):
+    """Delete on B, re-request on B: the record comes back through the peer
+    tier (read-through from A) and replicates onto B — still zero extra
+    inferences."""
+    factory = shared_factory()
+    srv_a, srv_b = two_servers(tmp_path, factory)
+    try:
+        client_b = RemoteMappingService(srv_b.url)
+        res = RemoteMappingService(srv_a.url).derive("tri2d", MODEL, 50)
+        client_b.delete_artifact(res.cache_key)       # drop B's local copy
+        store_b = srv_b.service.store
+        assert store_b.load_local(res.cache_key) is None
+
+        res_b = client_b.derive("tri2d", MODEL, 50)
+        assert res_b.cache_hit
+        assert factory.bank[MODEL].calls == 1
+        assert store_b.peer.hits == 1                 # served via peer pull
+        assert store_b.load_local(res.cache_key) is not None  # replicated
+        # the replication pull endpoint serves the raw record
+        rec = client_b.pull_record(res.cache_key)
+        assert rec["domain"] == "tri2d" and rec["key"] == res.cache_key
+    finally:
+        srv_a.close()
+        srv_b.close()
+
+
+def test_replicate_push_rejects_bad_checksum(tmp_path):
+    """The push endpoint verifies the record envelope before storing —
+    corruption (or a forged record) must not enter through the wire when
+    the disk tier would quarantine the same bytes on read."""
+    from repro.core.store import finalize_record
+
+    factory = shared_factory()
+    with make_server(tmp_path, factory) as server:
+        client = RemoteMappingService(server.url)
+        good = finalize_record("k1", {"domain": "tri2d", "pad": "x"})
+        assert client._call_json("/v1/replicate/k1", good) == {
+            "key": "k1", "stored": True}
+        assert client.pull_record("k1")["pad"] == "x"
+
+        tampered = {**good, "pad": "y"}  # payload changed, checksum stale
+        with pytest.raises(RemoteServiceError) as bad:
+            client._call_json("/v1/replicate/k2", tampered)
+        assert bad.value.status == 400
+        naked = {"domain": "tri2d", "pad": "z"}  # no envelope at all
+        with pytest.raises(RemoteServiceError) as no_env:
+            client._call_json("/v1/replicate/k3", naked)
+        assert no_env.value.status == 400
+        mismatched_key = finalize_record("other-key", {"domain": "tri2d"})
+        with pytest.raises(RemoteServiceError) as wrong_key:
+            client._call_json("/v1/replicate/k4", mismatched_key)
+        assert wrong_key.value.status == 400
+        for key in ("k2", "k3", "k4"):
+            with pytest.raises(RemoteServiceError):
+                client.pull_record(key)  # nothing landed
+
+
+def test_peer_absence_degrades_to_local_derivation(tmp_path):
+    """A dead peer is a miss, not an error: the service derives locally and
+    the peer tier just counts the failure."""
+    factory = shared_factory()
+    store = build_store(root=tmp_path, peers=["http://127.0.0.1:9"])
+    store.peer.timeout = 0.2
+    svc = MappingService(store=store, backend_factory=factory,
+                         n_validate=2000, sample_every=1)
+    res = svc.derive("gasket2d", MODEL, 20)
+    assert res.compiled and svc.stats.derivations == 1
+    assert store.peer.errors >= 1
+    assert store.peer.push_errors >= 1  # write-back also failed quietly
 
 
 def test_artifact_endpoint_and_error_codes(tmp_path):

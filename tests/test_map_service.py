@@ -177,6 +177,27 @@ def test_hammered_store_never_corrupts(tmp_path):
     assert json.loads(cache.path("k").read_text())["payload"] == record["payload"]
 
 
+def test_clear_skips_live_locks_and_inflight_tmp_files(tmp_path):
+    """clear() drops published records only: a live writer's .lock sentinel
+    and an in-flight .tmp file must survive untouched (deleting the sentinel
+    would let a second writer race the holder)."""
+    cache = ArtifactCache(tmp_path)
+    cache.store("k1", {"domain": "tri2d", "payload": "a"})
+    cache.store("k2", {"domain": "gasket2d", "payload": "b"})
+    lock = cache.lock("k1").acquire()
+    inflight = tmp_path / "inflight01234.tmp"
+    inflight.write_text('{"partial":')  # a writer mid-publish
+    try:
+        assert cache.clear() == 2
+        assert not list(tmp_path.glob("*.json"))
+        assert lock.path.exists()
+        assert lock.path.read_text() == lock.token  # still the holder's
+        assert inflight.exists()
+    finally:
+        lock.release()
+    assert not lock.path.exists()
+
+
 # ---------------------------------------------------------------------------
 # Lock lifecycle
 # ---------------------------------------------------------------------------

@@ -1,0 +1,328 @@
+"""Tiered ArtifactStore lifecycle: memory-LRU eviction order, disk TTL +
+max-bytes eviction over the access-time index, schema-version migration of
+legacy records, checksum-mismatch quarantine, read-through promotion, and
+the env/CLI construction surface."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.store import (
+    SCHEMA_VERSION, DiskStore, MemoryStore, NullLock, PeerStore, TieredStore,
+    build_store, default_store, finalize_record, record_checksum,
+)
+
+REC = {"domain": "tri2d", "model": "OSS:120b", "stage": 20, "compiled": True}
+
+
+def padded(n_bytes: int = 1024, **over) -> dict:
+    return {**REC, "pad": "x" * n_bytes, **over}
+
+
+# ---------------------------------------------------------------------------
+# MemoryStore — bounded LRU
+# ---------------------------------------------------------------------------
+
+
+def test_memory_lru_evicts_least_recently_used():
+    m = MemoryStore(max_entries=2)
+    m.store("a", padded(8))
+    m.store("b", padded(8))
+    m.load("a")            # refresh a: b is now the LRU entry
+    m.store("c", padded(8))
+    assert "a" in m and "c" in m and "b" not in m
+    assert m.evictions == 1
+    assert m.keys() == ["a", "c"]  # least-recent first
+    # store-refresh moves an existing key to MRU as well
+    m.store("a", padded(8))
+    m.store("d", padded(8))
+    assert m.keys() == ["a", "d"] and "c" not in m
+
+
+def test_memory_store_remembers_rehydrated_results():
+    m = MemoryStore(max_entries=4)
+    m.store("k", padded(8))
+    assert m.load_result("k") is None
+    token = object()
+    m.remember_result("k", token)
+    assert m.load_result("k") is token
+    assert m.result_hits == 1
+    m.delete("k")
+    assert m.load_result("k") is None
+    # remembering against an evicted/absent key is a silent no-op
+    m.remember_result("gone", token)
+    assert m.load_result("gone") is None
+
+
+def test_memory_zero_entries_disables_tier():
+    m = MemoryStore(max_entries=0)
+    m.store("k", padded(8))
+    assert m.load("k") is None and len(m) == 0
+
+
+# ---------------------------------------------------------------------------
+# DiskStore — versioned records, TTL/size eviction, migration, quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_disk_roundtrip_stamps_versioned_checksummed_envelope(tmp_path):
+    d = DiskStore(tmp_path)
+    d.store("k", padded(16))
+    on_disk = json.loads(d.path("k").read_text())
+    assert on_disk["schema"] == SCHEMA_VERSION
+    assert on_disk["key"] == "k"
+    assert on_disk["checksum"] == record_checksum(on_disk)
+    rec = d.load("k")
+    assert rec["domain"] == "tri2d" and d.hits == 1
+
+
+def test_disk_ttl_evicts_idle_records(tmp_path):
+    d = DiskStore(tmp_path, ttl_seconds=0.2)
+    d.store("old", padded(16))
+    time.sleep(0.3)
+    d.store("fresh", padded(16))  # publish triggers opportunistic eviction
+    assert "old" not in d and "fresh" in d
+    assert d.evictions_ttl == 1
+    # a loaded (touched) record is not idle: access refreshes the clock
+    time.sleep(0.15)
+    assert d.load("fresh") is not None
+    time.sleep(0.15)
+    assert d.evict()["ttl"] == 0  # accessed 0.15s ago < 0.2s ttl
+    assert "fresh" in d
+
+
+def test_disk_max_bytes_evicts_least_recently_accessed(tmp_path):
+    probe = DiskStore(tmp_path / "probe")
+    probe.store("k", padded(1024))
+    size = probe.path("k").stat().st_size
+
+    d = DiskStore(tmp_path / "store", max_bytes=int(size * 2.5))
+    d.store("a", padded(1024))
+    time.sleep(0.05)
+    d.store("b", padded(1024))
+    time.sleep(0.05)
+    assert d.load("a") is not None  # refresh a: b becomes the LRA record
+    time.sleep(0.05)
+    d.store("c", padded(1024))      # 3 records > budget for 2.5
+    assert "a" in d and "c" in d and "b" not in d
+    assert d.evictions_bytes == 1
+
+
+def test_disk_migrates_schema1_record_in_place(tmp_path):
+    d = DiskStore(tmp_path)
+    legacy = {"schema": 1, "key": "k", **padded(16)}
+    d.path("k").write_text(json.dumps(legacy))
+    rec = d.load("k")
+    assert rec["schema"] == SCHEMA_VERSION and rec["domain"] == "tri2d"
+    assert d.migrated == 1 and d.hits == 1
+    on_disk = json.loads(d.path("k").read_text())
+    assert on_disk["schema"] == SCHEMA_VERSION
+    assert on_disk["checksum"] == record_checksum(on_disk)
+    # the migrated record now round-trips through the normal verified path
+    d2 = DiskStore(tmp_path)
+    assert d2.load("k")["domain"] == "tri2d"
+    assert d2.migrated == 0
+
+
+def test_disk_quarantines_checksum_mismatch(tmp_path):
+    d = DiskStore(tmp_path)
+    d.store("k", padded(16))
+    on_disk = json.loads(d.path("k").read_text())
+    on_disk["pad"] = "tampered"  # payload changed, checksum stale
+    d.path("k").write_text(json.dumps(on_disk))
+    assert d.load("k") is None
+    assert d.quarantined == 1
+    assert not d.path("k").exists()
+    quarantined = tmp_path / "k.quarantined"
+    assert quarantined.exists()
+    assert json.loads(quarantined.read_text())["pad"] == "tampered"
+    # quarantined bytes are set aside, not destroyed: clear() and an
+    # unbounded store's evict() leave them for inspection
+    d.store("other", padded(16))
+    d.evict()
+    d.clear()
+    assert quarantined.exists()
+    usage = d.usage()
+    assert usage["quarantined_records"] == 1
+    assert usage["total_bytes"] == usage["quarantined_bytes"] > 0
+
+
+def test_quarantined_bytes_count_against_disk_budget(tmp_path):
+    """Under byte pressure quarantined files are reclaimed *first* — a
+    corrupting disk must not let set-aside bytes exceed the budget while
+    live records get evicted around them."""
+    probe = DiskStore(tmp_path / "probe")
+    probe.store("k", padded(1024))
+    size = probe.path("k").stat().st_size
+
+    d = DiskStore(tmp_path / "store", max_bytes=int(size * 2.5))
+    d.store("bad", padded(1024))
+    on_disk = json.loads(d.path("bad").read_text())
+    on_disk["pad"] = "y" * 1024  # same size, stale checksum
+    d.path("bad").write_text(json.dumps(on_disk))
+    assert d.load("bad") is None  # quarantined, still on disk
+    time.sleep(0.05)
+    d.store("a", padded(1024))
+    time.sleep(0.05)
+    d.store("b", padded(1024))   # 2 records + 1 quarantine > 2.5x budget
+    assert not (tmp_path / "store" / "bad.quarantined").exists()
+    assert "a" in d and "b" in d  # live records survived
+    assert d.evictions_bytes == 1
+    assert d.usage()["total_bytes"] <= int(size * 2.5)
+
+
+def test_disk_unknown_future_schema_is_a_miss(tmp_path):
+    d = DiskStore(tmp_path)
+    d.path("k").write_text(json.dumps({"schema": 99, **padded(8)}))
+    assert d.load("k") is None and d.misses == 1
+    assert d.path("k").exists()  # not quarantined — just not ours to parse
+
+
+def test_disk_delete(tmp_path):
+    d = DiskStore(tmp_path)
+    d.store("k", padded(8))
+    assert d.delete("k") and not d.delete("k")
+    assert d.deletes == 1 and "k" not in d
+
+
+# ---------------------------------------------------------------------------
+# TieredStore — promotion, fast paths, per-tier stats
+# ---------------------------------------------------------------------------
+
+
+def test_memory_tier_hit_performs_no_disk_read(tmp_path):
+    t = TieredStore(memory=MemoryStore(8), disk=DiskStore(tmp_path))
+    t.store("k", padded(16))
+    reads_before = t.disk.reads
+    for _ in range(5):
+        assert t.load("k") is not None
+    assert t.disk.reads == reads_before  # hot hits never touch disk
+    assert t.memory.hits == 5
+    assert t.stats()["memory"]["hits"] == 5
+
+
+def test_disk_hit_promotes_into_memory(tmp_path):
+    disk = DiskStore(tmp_path)
+    disk.store("k", padded(16))
+    t = TieredStore(memory=MemoryStore(8), disk=disk)  # memory starts cold
+    assert t.load("k") is not None   # disk hit, promoted
+    reads = disk.reads
+    assert t.load("k") is not None   # now a memory hit
+    assert disk.reads == reads
+    assert t.hits == 2 and t.misses == 0
+
+
+def test_tiered_delete_and_clear_cover_all_local_tiers(tmp_path):
+    t = TieredStore(memory=MemoryStore(8), disk=DiskStore(tmp_path))
+    t.store("k", padded(8))
+    assert t.delete("k")
+    assert t.load("k") is None and t.misses == 1
+    t.store("k2", padded(8))
+    assert t.clear() == 1
+    assert len(t) == 0 and "k2" not in t
+
+
+def test_tiered_without_disk_uses_null_lock():
+    t = TieredStore(memory=MemoryStore(8))
+    with t.lock("k") as lock:
+        assert isinstance(lock, NullLock) and not lock.broke_stale
+    t.store("k", padded(8))
+    assert t.load("k") is not None and t.root is None
+
+
+def test_peer_store_degrades_cleanly_when_unreachable():
+    p = PeerStore(["http://127.0.0.1:9"], timeout=0.2)
+    assert p.load("k") is None
+    assert p.errors == 1 and p.misses == 1
+    p.store("k", padded(8))  # push failure is counted, never raised
+    assert p.push_errors == 1 and p.pushes == 0
+    t = TieredStore(memory=MemoryStore(2), peers=p)
+    assert t.load("nope") is None and t.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Construction surface (env + knobs)
+# ---------------------------------------------------------------------------
+
+
+def test_build_store_assembles_requested_tiers(tmp_path):
+    t = build_store(root=tmp_path, ttl_seconds=5.0, max_bytes=1 << 20,
+                    memory_entries=7, peers=["http://a:1", "http://b:2/"])
+    assert t.memory.max_entries == 7
+    assert t.disk.ttl_seconds == 5.0 and t.disk.max_bytes == 1 << 20
+    assert t.peer.peers == ["http://a:1", "http://b:2"]
+    no_mem = build_store(root=tmp_path, memory_entries=0)
+    assert no_mem.memory is None and no_mem.peer is None
+
+
+def test_default_store_honors_env_knobs(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_ARTIFACT_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_STORE_TTL", "9.5")
+    monkeypatch.setenv("REPRO_STORE_MAX_BYTES", "4096")
+    monkeypatch.setenv("REPRO_MEMORY_ENTRIES", "3")
+    monkeypatch.setenv("REPRO_PEERS", "http://a:1, http://b:2")
+    t = default_store()
+    assert t.disk.ttl_seconds == 9.5 and t.disk.max_bytes == 4096
+    assert t.memory.max_entries == 3
+    assert t.peer.peers == ["http://a:1", "http://b:2"]
+    assert default_store() is t  # memoized: counters accumulate
+    monkeypatch.setenv("REPRO_ARTIFACT_CACHE", "off")
+    assert default_store() is None
+
+
+def test_finalize_record_is_idempotent():
+    rec = finalize_record("k", dict(REC))
+    assert finalize_record("k", rec) is rec
+    rekeyed = finalize_record("k2", rec)
+    assert rekeyed["key"] == "k2"
+    assert rekeyed["checksum"] == rec["checksum"]  # payload unchanged
+
+
+# ---------------------------------------------------------------------------
+# Served lifecycle: the service on a tiered store
+# ---------------------------------------------------------------------------
+
+
+def test_service_hot_path_skips_disk_and_rehydration(tmp_path):
+    from repro.serving import MappingService
+
+    svc = MappingService(store=build_store(root=tmp_path),
+                         n_validate=2000, sample_every=1)
+    first = svc.derive("tri2d", "OSS:120b", 20)
+    warm = svc.derive("tri2d", "OSS:120b", 20)     # memory record + rehydrate
+    reads = svc.store.disk.reads
+    hot = svc.derive("tri2d", "OSS:120b", 20)      # remembered result
+    assert svc.store.disk.reads == reads           # no disk read
+    assert hot is warm                             # no reconstruction either
+    assert not first.cache_hit and warm.cache_hit and hot.cache_hit
+    stats = svc.store_stats()
+    assert stats["memory"]["result_hits"] == 1
+    assert svc.stats.cache_hits == 2
+
+
+def test_service_survives_memory_eviction_via_disk(tmp_path):
+    from repro.serving import MappingService
+
+    svc = MappingService(store=build_store(root=tmp_path, memory_entries=1),
+                         n_validate=2000, sample_every=1)
+    svc.derive("tri2d", "OSS:120b", 20)
+    svc.derive("gasket2d", "OSS:120b", 20)   # evicts tri2d from memory
+    res = svc.derive("tri2d", "OSS:120b", 20)
+    assert res.cache_hit                     # disk tier caught it
+    assert svc.stats.derivations == 2
+    assert svc.store.memory.evictions >= 1
+    assert svc.store.disk.hits >= 1
+
+
+@pytest.mark.skipif(os.name != "posix", reason="posix path semantics")
+def test_env_int_float_parsers_reject_gracefully(monkeypatch, tmp_path):
+    """Empty knob strings mean 'unset', not zero."""
+    monkeypatch.setenv("REPRO_ARTIFACT_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_STORE_TTL", "")
+    monkeypatch.setenv("REPRO_STORE_MAX_BYTES", " ")
+    monkeypatch.delenv("REPRO_MEMORY_ENTRIES", raising=False)
+    monkeypatch.delenv("REPRO_PEERS", raising=False)
+    t = default_store()
+    assert t.disk.ttl_seconds is None and t.disk.max_bytes is None
+    assert t.memory.max_entries == 256 and t.peer is None
