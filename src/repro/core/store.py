@@ -36,16 +36,32 @@ import collections
 import hashlib
 import json
 import os
+import re
 import tempfile
 import threading
 import time
 import urllib.error
 import urllib.request
+import warnings
 from pathlib import Path
 from typing import Any, Iterable
 
 SCHEMA_VERSION = 2
 _ENVELOPE_FIELDS = ("schema", "key", "checksum")
+
+# a writer holds a publish .tmp for milliseconds; one this old was
+# abandoned by a crashed process and is reclaimable garbage
+_ORPHAN_TMP_SECONDS = 3600.0
+
+# Content addresses are sha256 hex digests (see cache_key) — anything else
+# is rejected before it can reach a filesystem path, so a wire-supplied key
+# like "../../etc/passwd" can never escape a store root.
+KEY_RE = re.compile(r"[0-9a-f]{64}")
+
+
+def valid_key(key: str) -> bool:
+    """True iff ``key`` is a well-formed content address."""
+    return isinstance(key, str) and KEY_RE.fullmatch(key) is not None
 
 
 def cache_key(domain: str, model: str, stage: int, prompt: str,
@@ -66,6 +82,18 @@ def record_checksum(record: dict[str, Any]) -> str:
     payload = {k: v for k, v in record.items() if k not in _ENVELOPE_FIELDS}
     blob = json.dumps(payload, sort_keys=True, default=str).encode()
     return hashlib.sha256(blob).hexdigest()
+
+
+def verify_envelope(key: str, rec: Any) -> bool:
+    """The full envelope check applied at every trust boundary (peer
+    reads, replication pushes): a dict stamped with the current schema,
+    keyed as expected, whose checksum matches its payload.  One helper so
+    a future schema bump can't weaken one boundary while tightening
+    another."""
+    return (isinstance(rec, dict)
+            and rec.get("schema") == SCHEMA_VERSION
+            and rec.get("key") == key
+            and rec.get("checksum") == record_checksum(rec))
 
 
 def finalize_record(key: str, record: dict[str, Any]) -> dict[str, Any]:
@@ -261,6 +289,10 @@ class ArtifactStore:
         """Attach a rehydrated result to a resident entry (no-op unless a
         memory tier holds the key)."""
 
+    def note_access(self, key: str) -> None:
+        """Record access recency without serving the record (no-op unless
+        the tier keeps an eviction index, like :class:`DiskStore`)."""
+
     # -- optional coordination (disk tier) ---------------------------------
     def lock(self, key: str, timeout: float = 30.0,
              stale_seconds: float = 60.0):
@@ -407,6 +439,12 @@ class DiskStore(ArtifactStore):
         self.ttl_seconds = ttl_seconds
         self.max_bytes = max_bytes
         self._access: dict[str, float] = {}
+        # eviction amortization: approximate on-disk byte total maintained
+        # incrementally (None = unknown, next publish runs a full scan) and
+        # the time of the last TTL sweep — so a publish is O(1) unless a
+        # budget may actually be exceeded (see store()/evict())
+        self._approx_bytes: int | None = None
+        self._last_ttl_scan = 0.0
         self._mu = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -480,16 +518,58 @@ class DiskStore(ArtifactStore):
         except OSError:
             pass
 
+    def note_access(self, key: str) -> None:
+        """Record access recency without any disk I/O (in-process index
+        only).  The memory tier calls this on hot hits so the hottest
+        records don't look coldest to this process's TTL/max-bytes
+        eviction; cross-process recency still comes from ``load``'s mtime
+        touch."""
+        with self._mu:
+            self._access[key] = time.time()
+
     # -- write path --------------------------------------------------------
     def store(self, key: str, record: dict[str, Any]) -> Path | None:
         record = finalize_record(key, record)
+        prev_size = 0
+        if self.max_bytes is not None:
+            # a republish overwrites: count the delta, not the full size,
+            # or the running total inflates until every publish scans
+            try:
+                prev_size = self.path(key).stat().st_size
+            except OSError:
+                prev_size = 0
         path = self._publish(key, record)
         if path is not None:
+            now = time.time()
             with self._mu:
-                self._access[key] = time.time()
-            if self.ttl_seconds is not None or self.max_bytes is not None:
-                self.evict()
+                self._access[key] = now
+            if self._needs_evict_scan(path, now, prev_size):
+                self.evict(now)
         return path
+
+    def _needs_evict_scan(self, published: Path, now: float,
+                          prev_size: int) -> bool:
+        """Whether this publish must pay a full directory sweep.  The
+        running byte total and last-TTL-sweep clock keep the common case
+        O(1): scan only when the approximate total may exceed the budget,
+        a TTL window has elapsed since the last sweep, or the total is
+        unknown (first publish / after clear())."""
+        if self.ttl_seconds is None and self.max_bytes is None:
+            return False
+        if self.ttl_seconds is not None \
+                and now - self._last_ttl_scan >= self.ttl_seconds:
+            return True
+        if self.max_bytes is None:
+            return False
+        try:
+            size = published.stat().st_size
+        except OSError:
+            return True  # can't track incrementally — fall back to a scan
+        with self._mu:
+            if self._approx_bytes is None:
+                return True
+            self._approx_bytes += size - prev_size
+            return self._approx_bytes > self.max_bytes
 
     def _publish(self, key: str, record: dict[str, Any]) -> Path | None:
         path = self.path(key)
@@ -499,10 +579,14 @@ class DiskStore(ArtifactStore):
             self.root.mkdir(parents=True, exist_ok=True)
             fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
             with os.fdopen(fd, "w") as f:
-                json.dump(record, f, indent=1)
+                # default=str matches record_checksum's serialization, so any
+                # value that checksummed is also publishable; the broad except
+                # keeps the never-raise contract for whatever still slips
+                # through (e.g. a circular payload)
+                json.dump(record, f, indent=1, default=str)
             os.replace(tmp, path)  # atomic publish
             published = True
-        except OSError:
+        except (OSError, TypeError, ValueError):
             return None
         finally:
             if tmp is not None and not published:
@@ -513,12 +597,21 @@ class DiskStore(ArtifactStore):
         return path
 
     def delete(self, key: str) -> bool:
+        path = self.path(key)
+        try:
+            size = path.stat().st_size
+        except OSError:
+            size = None
         with self._mu:
             self._access.pop(key, None)
         try:
-            self.path(key).unlink()
+            path.unlink()
         except OSError:
             return False
+        with self._mu:
+            if self._approx_bytes is not None:
+                self._approx_bytes = (max(0, self._approx_bytes - size)
+                                      if size is not None else None)
         self.deletes += 1
         return True
 
@@ -528,11 +621,24 @@ class DiskStore(ArtifactStore):
         Candidates are published ``*.json`` records and ``*.quarantined``
         files (the budget covers real disk use; quarantined bytes must not
         accumulate past it) — live ``.lock`` sentinels and in-flight
-        ``.tmp`` files are never touched.  Under byte pressure quarantined
-        files go first (they are never served), then records in
-        least-recently-accessed order.  Returns per-policy counts."""
+        ``.tmp`` files are never touched, but a ``.tmp`` abandoned by a
+        crashed writer (hours old) is reclaimed so repeated crashes can't
+        leak disk forever.  Under byte pressure quarantined files go first
+        (they are never served), then records in least-recently-accessed
+        order.  Returns per-policy counts."""
         now = time.time() if now is None else now
-        removed = {"ttl": 0, "bytes": 0}
+        removed = {"ttl": 0, "bytes": 0, "tmp": 0}
+        self._last_ttl_scan = now
+        try:
+            for p in self.root.glob("*.tmp"):
+                try:
+                    if now - p.stat().st_mtime > _ORPHAN_TMP_SECONDS:
+                        p.unlink()
+                        removed["tmp"] += 1
+                except OSError:
+                    pass
+        except OSError:
+            pass
 
         def scan(pattern: str, indexed: bool) -> list | None:
             out = []
@@ -576,9 +682,9 @@ class DiskStore(ArtifactStore):
                         continue
                     survivors.append((atime, size, key, p))
                 bucket[:] = survivors
+        total = sum(size for bucket in (records, quarantined)
+                    for _, size, _, _ in bucket)
         if self.max_bytes is not None:
-            total = sum(size for bucket in (records, quarantined)
-                        for _, size, _, _ in bucket)
             # quarantined first (oldest first), then records by LRA order
             for atime, size, key, p in sorted(quarantined) + sorted(records):
                 if total <= self.max_bytes:
@@ -587,6 +693,8 @@ class DiskStore(ArtifactStore):
                     total -= size
                     removed["bytes"] += 1
                     self.evictions_bytes += 1
+        with self._mu:
+            self._approx_bytes = total  # exact again after a full sweep
         return removed
 
     def clear(self) -> int:
@@ -602,6 +710,7 @@ class DiskStore(ArtifactStore):
                 pass
         with self._mu:
             self._access.clear()
+            self._approx_bytes = None  # quarantined files remain: rescan
         return n
 
     # -- introspection -----------------------------------------------------
@@ -688,10 +797,13 @@ class PeerStore(ArtifactStore):
                     OSError, ValueError):
                 self.errors += 1
                 continue
-            if (not isinstance(rec, dict)
-                    or rec.get("schema") != SCHEMA_VERSION
-                    or rec.get("checksum") != record_checksum(rec)):
-                self.errors += 1  # peer served junk — don't replicate it
+            if not verify_envelope(key, rec):
+                # peer served junk — or a record for a *different* cell (the
+                # checksum covers only the payload, so a mis-keyed response
+                # would otherwise verify and then be re-stamped under the
+                # requested key by store_local, permanently caching the
+                # wrong mapping).  Either way: don't replicate it.
+                self.errors += 1
                 continue
             self.hits += 1
             return rec
@@ -699,9 +811,16 @@ class PeerStore(ArtifactStore):
         return None
 
     def store(self, key: str, record: dict[str, Any]) -> None:
-        if not self.push:
+        if not self.push or not self.peers:
             return
-        body = json.dumps(finalize_record(key, record)).encode()
+        try:
+            body = json.dumps(finalize_record(key, record),
+                              default=str).encode()
+        except (TypeError, ValueError):
+            # unserializable record: every peer push fails, none raises —
+            # same degradation as DiskStore._publish
+            self.push_errors += len(self.peers)
+            return
         for peer in self.peers:
             req = urllib.request.Request(
                 f"{peer}/v1/replicate/{key}", data=body, method="POST",
@@ -766,6 +885,11 @@ class TieredStore(ArtifactStore):
         if self.memory is not None:
             rec = self.memory.load(key)
             if rec is not None:
+                if self.disk is not None:
+                    # keep the disk tier's eviction index truthful for
+                    # memory-shielded hits (index write only — hot hits
+                    # still do zero disk I/O)
+                    self.disk.note_access(key)
                 return rec
         if self.disk is not None:
             rec = self.disk.load(key)
@@ -775,9 +899,14 @@ class TieredStore(ArtifactStore):
                 return rec
         return None
 
-    def load(self, key: str) -> dict[str, Any] | None:
+    def load(self, key: str,
+             local_only: bool = False) -> dict[str, Any] | None:
+        """Full read-through (``local_only=True`` skips the peer tier —
+        the serving layer's lock-free fast path uses it so N concurrent
+        cold requests don't each pay the peer probe; the coalescing leader
+        probes peers exactly once)."""
         rec = self.load_local(key)
-        if rec is None and self.peer is not None:
+        if rec is None and not local_only and self.peer is not None:
             rec = self.peer.load(key)
             if rec is not None:
                 self.store_local(key, rec)  # replicate onto this node
@@ -792,6 +921,8 @@ class TieredStore(ArtifactStore):
             return None
         res = self.memory.load_result(key)
         if res is not None:
+            if self.disk is not None:
+                self.disk.note_access(key)
             self.hits += 1
         return res
 
@@ -837,7 +968,7 @@ class TieredStore(ArtifactStore):
     def evict(self) -> dict[str, int]:
         if self.disk is not None:
             return self.disk.evict()
-        return {"ttl": 0, "bytes": 0}
+        return {"ttl": 0, "bytes": 0, "tmp": 0}
 
     # -- introspection -----------------------------------------------------
     def __contains__(self, key: str) -> bool:
@@ -910,14 +1041,17 @@ def build_store(root: str | Path | None = None,
                 peer_timeout: float = 2.0,
                 peer_push: bool = True) -> TieredStore | None:
     """Assemble a TieredStore from knobs (the CLI / env surface).  Returns
-    None when the root resolves to the cache opt-out."""
+    None when the root resolves to the cache opt-out and no peers are
+    configured; opt-out *with* peers builds a diskless memory+peer node
+    (read-through replication without local persistence)."""
     root = resolve_root(root)
-    if root is None:
-        return None
     peers = split_peers(peers)
+    if root is None and not peers:
+        return None
     return TieredStore(
         memory=MemoryStore(memory_entries) if memory_entries > 0 else None,
-        disk=DiskStore(root, ttl_seconds=ttl_seconds, max_bytes=max_bytes),
+        disk=DiskStore(root, ttl_seconds=ttl_seconds, max_bytes=max_bytes)
+        if root is not None else None,
         peers=PeerStore(peers, timeout=peer_timeout,
                         push=peer_push) if peers else None,
     )
@@ -928,12 +1062,29 @@ _DEFAULT_STORES: dict[tuple, TieredStore] = {}
 
 def _env_float(name: str) -> float | None:
     val = os.environ.get(name, "").strip()
-    return float(val) if val else None
+    if not val:
+        return None
+    try:
+        return float(val)
+    except ValueError:
+        # a malformed knob degrades to unset, it must not crash every
+        # store construction in the process (same never-raise contract as
+        # the I/O paths) — but say so, the operator meant something
+        warnings.warn(f"ignoring malformed {name}={val!r}: expected a number",
+                      stacklevel=2)
+        return None
 
 
 def _env_int(name: str, default: int | None = None) -> int | None:
     val = os.environ.get(name, "").strip()
-    return int(val) if val else default
+    if not val:
+        return default
+    try:
+        return int(val)
+    except ValueError:
+        warnings.warn(f"ignoring malformed {name}={val!r}: expected an "
+                      "integer", stacklevel=2)
+        return default
 
 
 def env_knobs() -> dict[str, Any]:
@@ -962,9 +1113,9 @@ def default_store() -> TieredStore | None:
     calls (and across `derive_mapping` / `MappingService` / benchmarks in
     one process)."""
     root = resolve_root()
-    if root is None:
-        return None
     knobs = env_knobs()
+    if root is None and not knobs["peers"]:
+        return None  # full opt-out: no persistence and nobody to ask
     memo = (str(root), knobs["ttl_seconds"], knobs["max_bytes"],
             knobs["memory_entries"], tuple(knobs["peers"]))
     if memo not in _DEFAULT_STORES:

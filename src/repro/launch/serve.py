@@ -76,10 +76,10 @@ def serve_maps(args) -> None:
     else:
         mem = store.memory.max_entries if store.memory is not None else 0
         peers = store.peer.peers if store.peer is not None else []
-        desc = (f"{store.root} (memory={mem} entries, "
-                f"ttl={store.disk.ttl_seconds}, "
-                f"max_bytes={store.disk.max_bytes}, "
-                f"peers={peers or 'none'})")
+        disk = (f"{store.root} (ttl={store.disk.ttl_seconds}, "
+                f"max_bytes={store.disk.max_bytes})"
+                if store.disk is not None else "diskless")
+        desc = f"{disk} memory={mem} entries, peers={peers or 'none'}"
     print(f"mapping service on {server.url}  "
           f"(backend={args.backend}, store={desc})")
     print("endpoints: POST /v1/derive  GET|DELETE /v1/artifact/<key>  "

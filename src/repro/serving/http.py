@@ -8,6 +8,7 @@ sharing across machines means a network surface.  This module wraps a
 
     POST   /v1/derive           {domain, model, stage}  -> wire payload
     GET    /v1/artifact/<key>   cached derivation record by content address
+                                (local tiers only — no peer probe)
     DELETE /v1/artifact/<key>   drop one record from this node's tiers
     POST   /v1/grid             {domains, models, stages} -> NDJSON stream,
                                 one wire payload per resolved cell
@@ -170,7 +171,11 @@ def _make_handler(server: MappingHTTPServer):
 
         # -- plumbing ------------------------------------------------------
         def _send_json(self, status: int, payload: dict) -> None:
-            body = json.dumps(payload).encode()
+            # default=str matches the store's checksum/publish serialization
+            # (core/store.py), so a memory-tier record holding a value the
+            # disk tier would stringify (e.g. a Path) serves identically
+            # from either tier instead of 500ing from the hot one
+            body = json.dumps(payload, default=str).encode()
             self.send_response(status)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
@@ -188,6 +193,21 @@ def _make_handler(server: MappingHTTPServer):
             if not isinstance(body, dict):
                 raise ValueError("request body must be a JSON object")
             return body
+
+        def _key_from_path(self, prefix: str) -> str | None:
+            """The content address from a /v1/.../<key> URL, or None after
+            answering 400.  Keys are always sha256 hex digests (see
+            ``store.cache_key``), so rejecting anything else is lossless —
+            and it is the security boundary that keeps a wire-supplied
+            ``../``-style key from ever reaching a filesystem path."""
+            key = self.path[len(prefix):]
+            if not store_mod.valid_key(key):
+                self._send_json(400, {
+                    "error": "invalid key: content addresses are 64 "
+                             "lowercase hex characters",
+                    "key": key})
+                return None
+            return key
 
         def _timed(self, endpoint: str, fn) -> None:
             t0 = time.monotonic()
@@ -276,14 +296,20 @@ def _make_handler(server: MappingHTTPServer):
             self._send_json(200, pipeline.wire_from_result(res))
 
         def _artifact(self) -> None:
-            key = self.path[len("/v1/artifact/"):]
+            key = self._key_from_path("/v1/artifact/")
+            if key is None:
+                return
             store = server.service.store
             if store is None:
                 self._send_json(404, {"error": "server runs without a store "
                                                "(REPRO_ARTIFACT_CACHE=off)",
                                       "key": key})
                 return
-            rec = store.load(key)
+            # local tiers only: this is a cache-inspection endpoint, and a
+            # miss must not cost an uncoalesced peer sweep per request —
+            # peer read-through belongs to the coalesced derive path (and
+            # the explicit /v1/replicate surface)
+            rec = store.load(key, local_only=True)
             if rec is None:
                 self._send_json(404, {"error": f"no record for key {key!r}",
                                       "key": key})
@@ -297,7 +323,9 @@ def _make_handler(server: MappingHTTPServer):
             })
 
         def _artifact_delete(self) -> None:
-            key = self.path[len("/v1/artifact/"):]
+            key = self._key_from_path("/v1/artifact/")
+            if key is None:
+                return
             store = server.service.store
             if store is None:
                 self._send_json(404, {"error": "server runs without a store "
@@ -313,7 +341,9 @@ def _make_handler(server: MappingHTTPServer):
         def _replicate_pull(self) -> None:
             """The raw local record for a sibling server's PeerStore.
             Local tiers only — peers asking each other can never recurse."""
-            key = self.path[len("/v1/replicate/"):]
+            key = self._key_from_path("/v1/replicate/")
+            if key is None:
+                return
             store = server.service.store
             rec = store.load_local(key) if store is not None else None
             if rec is None:
@@ -328,7 +358,9 @@ def _make_handler(server: MappingHTTPServer):
             envelope is verified before anything lands: a mismatched or
             missing checksum is a 400, same bytes DiskStore would
             quarantine on read — corruption must not enter via the wire."""
-            key = self.path[len("/v1/replicate/"):]
+            key = self._key_from_path("/v1/replicate/")
+            if key is None:
+                return
             store = server.service.store
             if store is None:
                 self._send_json(404, {"error": "server runs without a store "
@@ -339,9 +371,7 @@ def _make_handler(server: MappingHTTPServer):
             if not rec or "domain" not in rec:
                 raise ValueError("replication push body must be a derivation "
                                  "record (JSON object with 'domain')")
-            if (rec.get("schema") != store_mod.SCHEMA_VERSION
-                    or rec.get("key") != key
-                    or rec.get("checksum") != store_mod.record_checksum(rec)):
+            if not store_mod.verify_envelope(key, rec):
                 raise ValueError(
                     "replication push rejected: record envelope must carry "
                     f"schema {store_mod.SCHEMA_VERSION}, the URL key, and a "

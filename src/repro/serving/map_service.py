@@ -42,7 +42,9 @@ from repro.core import pipeline
 from repro.core.artifact import MappingArtifact
 from repro.core.backends import LLMBackend, MockLLMBackend
 from repro.core.domains import DOMAINS, Domain
-from repro.core.store import ArtifactStore, as_tiered, default_store
+from repro.core.store import (
+    ArtifactStore, as_tiered, default_store, finalize_record,
+)
 
 _USE_DEFAULT_CACHE = object()
 
@@ -187,8 +189,11 @@ class MappingService:
             raise
 
     def _derive_admitted(self, req: pipeline.DerivationRequest, gt):
-        # lock-free fast path: a published record needs no coordination
-        res = self._from_cache(req)
+        # lock-free fast path: a locally-published record needs no
+        # coordination.  Local tiers only — N concurrent cold requests
+        # must not each pay the peer probe (timeout x peers); the
+        # coalescing leader probes peers exactly once under the lock.
+        res = self._from_cache(req, local_only=True)
         if res is not None:
             return res
 
@@ -205,8 +210,9 @@ class MappingService:
                 raise fl.error
             return fl.result  # type: ignore[return-value]
 
+        push = None
         try:
-            fl.result = self._derive_locked(req, gt)
+            fl.result, push = self._derive_locked(req, gt)
             return fl.result
         except BaseException as e:
             fl.error = e
@@ -215,15 +221,23 @@ class MappingService:
             with self._mu:
                 self._inflight.pop(req.key, None)
             fl.event.set()
+            if push is not None:
+                # peer write-back last: after the file lock (cross-process
+                # waiters) AND after the event (coalesced threads) are both
+                # released — a slow or dead peer (timeout x N peers) delays
+                # only the leader's own response, never the followers.
+                # PeerStore.store never raises (push failures are counted).
+                push()
 
-    def _from_cache(self, req: pipeline.DerivationRequest):
+    def _from_cache(self, req: pipeline.DerivationRequest,
+                    local_only: bool = False):
         if self.store is None:
             return None
         # hottest path: a previously-rehydrated result resident in the
         # memory tier — no disk read, no JSON parse, no reconstruction
         res = self.store.load_result(req.key)
         if res is None:
-            rec = self.store.load(req.key)
+            rec = self.store.load(req.key, local_only=local_only)
             if rec is None:
                 return None
             res = pipeline.result_from_record(rec, req.domain, req.key)
@@ -237,11 +251,14 @@ class MappingService:
     def _derive_locked(self, req: pipeline.DerivationRequest, gt):
         """Leader path: under the store's per-key file lock, re-check the
         store (another process may have published while we waited), then run
-        the pipeline stages and publish atomically."""
+        the pipeline stages and publish atomically.  Returns ``(result,
+        push)`` where ``push`` is the deferred peer write-back (or None) —
+        best-effort replication must run only after both the file lock and
+        the coalescing event are released, so the caller sequences it."""
         if self.store is None:
             with self._mu:
                 self.stats.derivations += 1
-            return pipeline.run_stages(req, gt)
+            return pipeline.run_stages(req, gt), None
         lock = self.store.lock(req.key, timeout=self.lock_timeout,
                                stale_seconds=self.stale_lock_seconds)
         with lock:
@@ -250,12 +267,17 @@ class MappingService:
                     self.stats.stale_locks_broken += 1
             res = self._from_cache(req)
             if res is not None:
-                return res
+                return res, None
             res = pipeline.run_stages(req, gt)
-            self.store.store(req.key, pipeline.record_from_result(res))
+            record = finalize_record(req.key,
+                                     pipeline.record_from_result(res))
+            self.store.store_local(req.key, record)
             with self._mu:
                 self.stats.derivations += 1
-            return res
+        peer = self.store.peer
+        push = (lambda: peer.store(req.key, record)) \
+            if peer is not None else None
+        return res, push
 
     def backends(self) -> dict[str, LLMBackend]:
         """The per-model backends built so far (read-only view — the HTTP

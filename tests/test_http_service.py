@@ -283,16 +283,17 @@ def test_artifact_miss_is_structured_json(tmp_path):
     """GET /v1/artifact/<key> misses answer with a JSON error body carrying
     the key, under the JSON content type — same envelope as every other
     endpoint, so clients never special-case the miss path."""
+    missing = "deadbeef" * 8  # well-formed content address, never stored
     factory = shared_factory()
     with make_server(tmp_path, factory) as server:
         with pytest.raises(urllib.error.HTTPError) as err:
-            urllib.request.urlopen(f"{server.url}/v1/artifact/deadbeef")
+            urllib.request.urlopen(f"{server.url}/v1/artifact/{missing}")
         e = err.value
         assert e.code == 404
         assert e.headers.get("Content-Type") == "application/json"
         body = json.loads(e.read())
-        assert body["key"] == "deadbeef"
-        assert "deadbeef" in body["error"]
+        assert body["key"] == missing
+        assert missing in body["error"]
 
 
 def test_store_stats_and_delete_endpoints(tmp_path):
@@ -409,29 +410,74 @@ def test_replicate_push_rejects_bad_checksum(tmp_path):
     the disk tier would quarantine the same bytes on read."""
     from repro.core.store import finalize_record
 
+    k1, k2, k3, k4 = ("a1" * 32, "b2" * 32, "c3" * 32, "d4" * 32)
     factory = shared_factory()
     with make_server(tmp_path, factory) as server:
         client = RemoteMappingService(server.url)
-        good = finalize_record("k1", {"domain": "tri2d", "pad": "x"})
-        assert client._call_json("/v1/replicate/k1", good) == {
-            "key": "k1", "stored": True}
-        assert client.pull_record("k1")["pad"] == "x"
+        good = finalize_record(k1, {"domain": "tri2d", "pad": "x"})
+        assert client._call_json(f"/v1/replicate/{k1}", good) == {
+            "key": k1, "stored": True}
+        assert client.pull_record(k1)["pad"] == "x"
 
         tampered = {**good, "pad": "y"}  # payload changed, checksum stale
         with pytest.raises(RemoteServiceError) as bad:
-            client._call_json("/v1/replicate/k2", tampered)
+            client._call_json(f"/v1/replicate/{k2}", tampered)
         assert bad.value.status == 400
         naked = {"domain": "tri2d", "pad": "z"}  # no envelope at all
         with pytest.raises(RemoteServiceError) as no_env:
-            client._call_json("/v1/replicate/k3", naked)
+            client._call_json(f"/v1/replicate/{k3}", naked)
         assert no_env.value.status == 400
-        mismatched_key = finalize_record("other-key", {"domain": "tri2d"})
+        mismatched_key = finalize_record("e5" * 32, {"domain": "tri2d"})
         with pytest.raises(RemoteServiceError) as wrong_key:
-            client._call_json("/v1/replicate/k4", mismatched_key)
+            client._call_json(f"/v1/replicate/{k4}", mismatched_key)
         assert wrong_key.value.status == 400
-        for key in ("k2", "k3", "k4"):
+        for key in (k2, k3, k4):
             with pytest.raises(RemoteServiceError):
                 client.pull_record(key)  # nothing landed
+
+
+def test_wire_keys_cannot_escape_the_store_root(tmp_path):
+    """A wire-supplied key becomes a filesystem path component inside the
+    store, so anything that is not a sha256 content address is rejected
+    with 400 before it touches the store — ``../`` can neither read,
+    delete, nor write outside the store root."""
+    import http.client
+
+    from repro.core.store import finalize_record
+
+    secret = tmp_path / "secret.json"
+    secret.write_text(json.dumps({"outside": "the store"}))
+    store = build_store(root=tmp_path / "store")
+    svc = MappingService(store=store, backend_factory=shared_factory(),
+                         n_validate=2000, sample_every=1)
+    with MappingHTTPServer(svc) as server:
+        def raw(method, path, body=None):
+            # http.client sends the path verbatim (urllib would not let a
+            # "../" segment through unmangled)
+            conn = http.client.HTTPConnection(server.host, server.port)
+            try:
+                headers = {"Content-Type": "application/json"} if body else {}
+                conn.request(method, path, body=body, headers=headers)
+                resp = conn.getresponse()
+                return resp.status, json.loads(resp.read())
+            finally:
+                conn.close()
+
+        evil = "../secret"
+        for method, path in (("GET", f"/v1/artifact/{evil}"),
+                             ("DELETE", f"/v1/artifact/{evil}"),
+                             ("GET", f"/v1/replicate/{evil}")):
+            status, body = raw(method, path)
+            assert status == 400, (method, path)
+            assert "invalid key" in body["error"]
+        assert secret.exists()  # nothing deleted it
+        assert json.loads(secret.read_text()) == {"outside": "the store"}
+
+        planted = finalize_record("../planted", {"domain": "tri2d"})
+        status, body = raw("POST", "/v1/replicate/../planted",
+                           json.dumps(planted))
+        assert status == 400
+        assert not (tmp_path / "planted.json").exists()  # nothing landed
 
 
 def test_peer_absence_degrades_to_local_derivation(tmp_path):
@@ -457,8 +503,11 @@ def test_artifact_endpoint_and_error_codes(tmp_path):
         assert fetched["record"]["domain"] == "tri2d"
         assert fetched["artifact"]["source"] == res.source
         with pytest.raises(RemoteServiceError) as e404:
-            client.fetch_artifact("no-such-key")
+            client.fetch_artifact("f0" * 32)  # well-formed, never stored
         assert e404.value.status == 404
+        with pytest.raises(RemoteServiceError) as ekey:
+            client.fetch_artifact("no-such-key")  # malformed address
+        assert ekey.value.status == 400
         with pytest.raises(RemoteServiceError) as edom:
             client.derive("not-a-domain", MODEL, 20)
         assert edom.value.status == 404

@@ -4,13 +4,15 @@ legacy records, checksum-mismatch quarantine, read-through promotion, and
 the env/CLI construction surface."""
 import json
 import os
+import threading
 import time
+from pathlib import Path
 
 import pytest
 
 from repro.core.store import (
     SCHEMA_VERSION, DiskStore, MemoryStore, NullLock, PeerStore, TieredStore,
-    build_store, default_store, finalize_record, record_checksum,
+    build_store, default_store, finalize_record, record_checksum, valid_key,
 )
 
 REC = {"domain": "tri2d", "model": "OSS:120b", "stage": 20, "compiled": True}
@@ -179,6 +181,21 @@ def test_disk_unknown_future_schema_is_a_miss(tmp_path):
     assert d.path("k").exists()  # not quarantined — just not ours to parse
 
 
+def test_evict_reclaims_abandoned_tmp_files(tmp_path):
+    """A crashed writer's orphaned ``.tmp`` (hours old) is reclaimed by
+    evict(); an in-flight one (fresh mtime) is never touched."""
+    d = DiskStore(tmp_path, ttl_seconds=3600.0)
+    d.store("aa" * 32, padded(8))
+    old = tmp_path / "orphan123.tmp"
+    old.write_text("{")
+    os.utime(old, (time.time() - 7200, time.time() - 7200))
+    fresh = tmp_path / "inflight456.tmp"
+    fresh.write_text("{")
+    assert d.evict()["tmp"] == 1
+    assert not old.exists() and fresh.exists()
+    assert "aa" * 32 in d  # records untouched by the tmp sweep
+
+
 def test_disk_delete(tmp_path):
     d = DiskStore(tmp_path)
     d.store("k", padded(8))
@@ -200,6 +217,35 @@ def test_memory_tier_hit_performs_no_disk_read(tmp_path):
     assert t.disk.reads == reads_before  # hot hits never touch disk
     assert t.memory.hits == 5
     assert t.stats()["memory"]["hits"] == 5
+
+
+def test_memory_hits_keep_disk_recency_fresh(tmp_path):
+    """Memory-shielded hits must still count as access recency for the
+    disk tier's eviction index — otherwise the hottest records look
+    coldest to TTL/max-bytes eviction and get evicted from disk first."""
+    key = "ab" * 32
+    t = TieredStore(memory=MemoryStore(8),
+                    disk=DiskStore(tmp_path, ttl_seconds=0.3))
+    t.store(key, padded(16))
+    reads = t.disk.reads
+    for _ in range(3):
+        time.sleep(0.2)
+        assert t.load(key) is not None   # memory hits the whole time
+    assert t.disk.reads == reads         # ...with zero disk I/O
+    # 0.6s wall > ttl, but the hits kept the access index fresh
+    assert t.disk.evict()["ttl"] == 0
+    assert key in t.disk
+
+
+def test_tiered_local_only_load_skips_peer_probe():
+    """The serving fast path (pre-coalescing) reads local tiers only — a
+    cold cell must not cost every concurrent thread a peer probe."""
+    p = PeerStore(["http://127.0.0.1:9"], timeout=0.2)
+    t = TieredStore(memory=MemoryStore(2), peers=p)
+    assert t.load("ab" * 32, local_only=True) is None
+    assert p.errors == 0 and p.misses == 0   # peer never probed
+    assert t.load("ab" * 32) is None
+    assert p.errors == 1                     # full read-through does probe
 
 
 def test_disk_hit_promotes_into_memory(tmp_path):
@@ -231,12 +277,75 @@ def test_tiered_without_disk_uses_null_lock():
     assert t.load("k") is not None and t.root is None
 
 
+def test_disk_publish_matches_checksum_serialization(tmp_path):
+    """Any value record_checksum can serialize (default=str — e.g. a Path)
+    must also publish, and a record that can't serialize at all degrades to
+    None — never an exception on the serving path."""
+    d = DiskStore(tmp_path)
+    key = "aa" * 32
+    assert d.store(key, padded(8, source_path=Path("/tmp/somewhere"))) \
+        is not None
+    back = d.load(key)
+    assert back["source_path"] == "/tmp/somewhere"
+    assert d.hits == 1 and d.quarantined == 0  # checksum verified on read
+    circular: dict = {}
+    circular["self"] = circular
+    assert d._publish("bb" * 32, circular) is None  # swallowed, not raised
+
+
+def test_valid_key_accepts_only_content_addresses():
+    assert valid_key("ab" * 32)
+    for bad in ("", "ab" * 31, "AB" * 32, "../secret", "ab" * 32 + "\n",
+                "g" * 64, None):
+        assert not valid_key(bad)
+
+
+def test_peer_load_rejects_record_for_a_different_key():
+    """A mis-routed peer response (valid envelope, wrong cell) must not
+    verify: the checksum covers only the payload, so without the key check
+    it would pass and be re-stamped under the requested key downstream —
+    permanently caching the wrong mapping."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    served = finalize_record("ee" * 32, dict(REC))
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *args):
+            pass
+
+        def do_GET(self):  # noqa: N802 (http.server API)
+            body = json.dumps(served).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    try:
+        p = PeerStore([f"http://127.0.0.1:{httpd.server_address[1]}"])
+        assert p.load("ff" * 32) is None   # asked for ff…, served ee…
+        assert p.errors == 1 and p.misses == 1
+        assert p.load("ee" * 32) == served  # the matching key still verifies
+        assert p.hits == 1
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        thread.join(timeout=2.0)
+
+
 def test_peer_store_degrades_cleanly_when_unreachable():
     p = PeerStore(["http://127.0.0.1:9"], timeout=0.2)
     assert p.load("k") is None
     assert p.errors == 1 and p.misses == 1
     p.store("k", padded(8))  # push failure is counted, never raised
     assert p.push_errors == 1 and p.pushes == 0
+    circular: dict = {}
+    circular["self"] = circular
+    p.store("k2", circular)  # unserializable: also counted, never raised
+    assert p.push_errors == 2 and p.pushes == 0
     t = TieredStore(memory=MemoryStore(2), peers=p)
     assert t.load("nope") is None and t.misses == 1
 
@@ -256,6 +365,17 @@ def test_build_store_assembles_requested_tiers(tmp_path):
     assert no_mem.memory is None and no_mem.peer is None
 
 
+def test_build_store_diskless_peer_node(monkeypatch):
+    """Cache opt-out + peers = a diskless memory+peer node (read-through
+    replication without local persistence) — opt-out with no peers stays
+    store-less."""
+    monkeypatch.setenv("REPRO_ARTIFACT_CACHE", "off")
+    t = build_store(peers=["http://a:1"])
+    assert t is not None and t.disk is None
+    assert t.memory is not None and t.peer.peers == ["http://a:1"]
+    assert build_store() is None
+
+
 def test_default_store_honors_env_knobs(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_ARTIFACT_CACHE", str(tmp_path))
     monkeypatch.setenv("REPRO_STORE_TTL", "9.5")
@@ -268,7 +388,11 @@ def test_default_store_honors_env_knobs(monkeypatch, tmp_path):
     assert t.peer.peers == ["http://a:1", "http://b:2"]
     assert default_store() is t  # memoized: counters accumulate
     monkeypatch.setenv("REPRO_ARTIFACT_CACHE", "off")
-    assert default_store() is None
+    diskless = default_store()  # peers still configured: diskless node
+    assert diskless is not None and diskless.disk is None
+    assert diskless.peer.peers == ["http://a:1", "http://b:2"]
+    monkeypatch.delenv("REPRO_PEERS")
+    assert default_store() is None  # full opt-out
 
 
 def test_finalize_record_is_idempotent():
@@ -317,7 +441,9 @@ def test_service_survives_memory_eviction_via_disk(tmp_path):
 
 @pytest.mark.skipif(os.name != "posix", reason="posix path semantics")
 def test_env_int_float_parsers_reject_gracefully(monkeypatch, tmp_path):
-    """Empty knob strings mean 'unset', not zero."""
+    """Empty knob strings mean 'unset', not zero — and a malformed value
+    degrades to unset with a warning instead of crashing every store
+    construction in the process."""
     monkeypatch.setenv("REPRO_ARTIFACT_CACHE", str(tmp_path))
     monkeypatch.setenv("REPRO_STORE_TTL", "")
     monkeypatch.setenv("REPRO_STORE_MAX_BYTES", " ")
@@ -326,3 +452,11 @@ def test_env_int_float_parsers_reject_gracefully(monkeypatch, tmp_path):
     t = default_store()
     assert t.disk.ttl_seconds is None and t.disk.max_bytes is None
     assert t.memory.max_entries == 256 and t.peer is None
+
+    monkeypatch.setenv("REPRO_STORE_TTL", "7d")       # not a number
+    monkeypatch.setenv("REPRO_STORE_MAX_BYTES", "1G")  # not an integer
+    monkeypatch.setenv("REPRO_MEMORY_ENTRIES", "many")
+    with pytest.warns(UserWarning, match="malformed"):
+        t = default_store()
+    assert t.disk.ttl_seconds is None and t.disk.max_bytes is None
+    assert t.memory.max_entries == 256
