@@ -31,7 +31,8 @@ def main() -> None:
     p.add_argument("--full", action="store_true",
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
-                   help="accuracy|fig5|dense|fractal|attn|msimplex|serving")
+                   help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
+                        "|cluster")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
@@ -56,6 +57,7 @@ def main() -> None:
         "attn": attn_kernel.run,
         "msimplex": msimplex_scaling.run,
         "serving": serving.run,
+        "cluster": serving.cluster_suite,
     }
     report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
@@ -80,14 +82,17 @@ def main() -> None:
             "cache_misses": cache_after["misses"] - cache_before["misses"],
             "failed": any(f[0] == name for f in failures),
         }
-    if "serving" in report["suites"] and serving.LAST_METRICS:
+    if serving.LAST_METRICS and ("serving" in report["suites"]
+                                 or "cluster" in report["suites"]):
         report["serving"] = serving.LAST_METRICS
         # the serving suite runs against its own private store, invisible to
         # default_cache() — take its hit/miss deltas from the server's own
         # counters instead
-        store = serving.LAST_METRICS["server"].get("store", {})
-        report["suites"]["serving"]["cache_hits"] = store.get("hits", 0)
-        report["suites"]["serving"]["cache_misses"] = store.get("misses", 0)
+        if "serving" in report["suites"] and "server" in serving.LAST_METRICS:
+            store = serving.LAST_METRICS["server"].get("store", {})
+            report["suites"]["serving"]["cache_hits"] = store.get("hits", 0)
+            report["suites"]["serving"]["cache_misses"] = store.get(
+                "misses", 0)
     report["wall_seconds"] = time.time() - t0
     report["failures"] = failures
 

@@ -17,6 +17,15 @@ The store-pressure sub-suite isolates where a hot hit resolves:
   * eviction churn — throughput when the disk budget is smaller than the
     working set, so records evict and re-derive continuously.
 
+The cluster sub-suite (``--only cluster``) measures the two transports this
+fleet actually pays for:
+
+  * keep-alive vs fresh-connection hot derive — the pooled ``http.client``
+    transport against the per-request ``Connection: close`` baseline;
+  * owner-routed vs forwarded derive on a real 3-node ring — the client
+    hashing locally and hitting the owner, against the server-side
+    forwarding hop a ring-naive client pays.
+
 Run metrics (cache hits, coalescing, p50/p95 from the server's own
 /metrics, per-tier store counters) land in ``LAST_METRICS`` so ``run.py
 --json`` can emit them.
@@ -187,5 +196,107 @@ def store_pressure(n_hot: int = 30, n_churn: int = 24) -> dict:
     return pressure
 
 
+def _timed_derives(client, domain: str, stage: int, n: int,
+                   before_each=None) -> list[float]:
+    out = []
+    for _ in range(n):
+        if before_each is not None:
+            before_each()
+        t0 = time.perf_counter()
+        res = client.derive(domain, MODEL, stage)
+        out.append((time.perf_counter() - t0) * 1e6)
+        assert res.cache_hit
+    out.sort()
+    return out
+
+
+def cluster_suite(n_hot: int = 60) -> dict:
+    """Keep-alive vs fresh-connection hot derive, and owner-routed vs
+    forwarded derive latency on a 3-node consistent-hash ring."""
+    header("serving: cluster (keep-alive transport, ring routing)")
+    from repro.serving.cluster import ClusterMembership
+
+    kw = dict(n_validate=20_000, sample_every=10)
+
+    # -- keep-alive vs fresh connection (one server, hot cell) -------------
+    svc = MappingService(store=build_store(
+        root=tempfile.mkdtemp(prefix="bench_cluster_")), **kw)
+    with MappingHTTPServer(svc) as server:
+        pooled = RemoteMappingService(server.url)
+        fresh = RemoteMappingService(server.url, keep_alive=False)
+        pooled.derive("tri2d", MODEL, 100)  # derive once, then all hot
+        keep_us = _timed_derives(pooled, "tri2d", 100, n_hot)
+        fresh_us = _timed_derives(fresh, "tri2d", 100, n_hot)
+    emit("cluster_hot_keepalive_p50", keep_us[len(keep_us) // 2], "pooled")
+    emit("cluster_hot_keepalive_p95", keep_us[int(len(keep_us) * 0.95)],
+         "pooled")
+    emit("cluster_hot_fresh_p50", fresh_us[len(fresh_us) // 2], "tcp/req")
+    emit("cluster_hot_fresh_p95", fresh_us[int(len(fresh_us) * 0.95)],
+         "tcp/req")
+
+    # -- owner-routed vs forwarded derive (3-node ring) --------------------
+    root = tempfile.mkdtemp(prefix="bench_ring_")
+    servers = []
+    seeds = []
+    for i in range(3):
+        node = MappingHTTPServer(
+            MappingService(store=build_store(root=f"{root}/n{i}"),
+                           **kw)).start()
+        node.attach_cluster(ClusterMembership(
+            node.url, seeds=seeds, replicas=2, vnodes=64,
+            heartbeat_interval=0.1, down_after=2.0, sync_interval=5.0))
+        seeds = seeds or [node.url]
+        servers.append(node)
+    deadline = time.perf_counter() + 20
+    while any(len(s.cluster.ring.nodes) < 3 for s in servers):
+        assert time.perf_counter() < deadline, "ring never converged"
+        time.sleep(0.05)
+    try:
+        key = servers[0].service.request_key("gasket2d", MODEL, 100)
+        owners = servers[0].cluster.owners(key)
+        non_owner = next(s for s in servers if s.url not in owners)
+        client = RemoteMappingService(non_owner.url)
+        client.derive("gasket2d", MODEL, 100)  # derive + learn the key
+        cell = ("gasket2d", MODEL, 100)
+        # forwarded: forget the key each time, so every request pays the
+        # server-side hop from the non-owner to the ring owner
+        fwd_us = _timed_derives(
+            client, "gasket2d", 100, n_hot,
+            before_each=lambda: client._cell_keys.pop(cell, None))
+        # owner-routed: the client hashes locally and hits the owner
+        client.derive("gasket2d", MODEL, 100)  # re-learn the key
+        routed_us = _timed_derives(client, "gasket2d", 100, n_hot)
+        assert client.stats.routed >= n_hot
+        forwarded_total = non_owner.forwarded
+    finally:
+        for s in servers:
+            s.close()
+    emit("cluster_derive_forwarded_p50", fwd_us[len(fwd_us) // 2], "2hop")
+    emit("cluster_derive_owner_routed_p50",
+         routed_us[len(routed_us) // 2], "direct")
+
+    cluster = {
+        "keepalive_p50_us": keep_us[len(keep_us) // 2],
+        "keepalive_p95_us": keep_us[int(len(keep_us) * 0.95)],
+        "fresh_p50_us": fresh_us[len(fresh_us) // 2],
+        "fresh_p95_us": fresh_us[int(len(fresh_us) * 0.95)],
+        "keepalive_saving_p50_us": (fresh_us[len(fresh_us) // 2] -
+                                    keep_us[len(keep_us) // 2]),
+        "forwarded_p50_us": fwd_us[len(fwd_us) // 2],
+        "owner_routed_p50_us": routed_us[len(routed_us) // 2],
+        "forwarding_hop_cost_us": (fwd_us[len(fwd_us) // 2] -
+                                   routed_us[len(routed_us) // 2]),
+        "forwarded_requests": forwarded_total,
+        "client_stats": client.stats.as_dict(),
+    }
+    LAST_METRICS["cluster"] = cluster
+    print(f"(keep-alive p50 {cluster['keepalive_p50_us']:.0f}us vs fresh "
+          f"{cluster['fresh_p50_us']:.0f}us; owner-routed p50 "
+          f"{cluster['owner_routed_p50_us']:.0f}us vs forwarded "
+          f"{cluster['forwarded_p50_us']:.0f}us)")
+    return cluster
+
+
 if __name__ == "__main__":
     run()
+    cluster_suite()

@@ -44,7 +44,7 @@ import urllib.error
 import urllib.request
 import warnings
 from pathlib import Path
-from typing import Any, Iterable
+from typing import Any, Callable, Iterable
 
 SCHEMA_VERSION = 2
 _ENVELOPE_FIELDS = ("schema", "key", "checksum")
@@ -278,6 +278,11 @@ class ArtifactStore:
 
     def stats(self) -> dict[str, Any]:
         return {}
+
+    def keys(self) -> list[str]:
+        """The tier's resident content addresses (the anti-entropy manifest
+        surface).  Remote tiers return [] — a manifest is always local."""
+        return []
 
     # -- optional fast paths (memory tier) ---------------------------------
     def load_result(self, key: str):
@@ -736,6 +741,15 @@ class DiskStore(ArtifactStore):
         out["total_bytes"] = out["bytes"] + out["quarantined_bytes"]
         return out
 
+    def keys(self) -> list[str]:
+        """Published content addresses (quarantined records excluded — a
+        manifest must only advertise records the node would actually serve)."""
+        try:
+            return sorted(p.stem for p in self.root.glob("*.json")
+                          if valid_key(p.stem))
+        except OSError:
+            return []
+
     def __contains__(self, key: str) -> bool:
         return self.path(key).exists()
 
@@ -767,23 +781,41 @@ class PeerStore(ArtifactStore):
     returns the first checksum-verified record; every failure mode
     (unreachable peer, 404, corrupt payload) moves on to the next peer and
     ultimately degrades to a miss.  ``store`` POSTs the freshly-published
-    record to every peer so siblings converge without waiting for a pull;
-    push failures are counted, never raised — replication is an
-    optimization, not a correctness requirement."""
+    record so siblings converge without waiting for a pull; push failures
+    are counted, never raised — replication is an optimization, not a
+    correctness requirement.
 
-    def __init__(self, peers: Iterable[str], timeout: float = 2.0,
-                 push: bool = True):
+    Topology comes from one of two places: the static ``peers`` list (PR 4's
+    broadcast mesh — every pull probes everyone, every push lands
+    everywhere) or, when a ``router`` is attached
+    (:meth:`repro.serving.cluster.ClusterMembership.replica_peers`), the
+    consistent-hash ring: pulls route to the key's owners and pushes are
+    scoped to the K replicas instead of the whole fleet.  The router is
+    authoritative while set — an empty owner list means "nobody else should
+    hold this key", not "fall back to broadcasting"."""
+
+    def __init__(self, peers: Iterable[str] = (), timeout: float = 2.0,
+                 push: bool = True,
+                 router: "Callable[[str], list[str]] | None" = None):
         self.peers = [u.rstrip("/") for u in peers if u]
         self.timeout = timeout
         self.push = push
+        self.router = router
         self.hits = 0
         self.misses = 0
         self.errors = 0
         self.pushes = 0
         self.push_errors = 0
 
+    def targets(self, key: str) -> list[str]:
+        """The sibling URLs a pull/push for ``key`` addresses: the ring
+        owners when a router is attached, else every static peer."""
+        if self.router is not None:
+            return [u.rstrip("/") for u in self.router(key) if u]
+        return self.peers
+
     def load(self, key: str) -> dict[str, Any] | None:
-        for peer in self.peers:
+        for peer in self.targets(key):
             url = f"{peer}/v1/replicate/{key}"
             try:
                 with urllib.request.urlopen(  # noqa: S310 — operator-set URL
@@ -811,7 +843,8 @@ class PeerStore(ArtifactStore):
         return None
 
     def store(self, key: str, record: dict[str, Any]) -> None:
-        if not self.push or not self.peers:
+        targets = self.targets(key) if self.push else []
+        if not targets:
             return
         try:
             body = json.dumps(finalize_record(key, record),
@@ -819,9 +852,9 @@ class PeerStore(ArtifactStore):
         except (TypeError, ValueError):
             # unserializable record: every peer push fails, none raises —
             # same degradation as DiskStore._publish
-            self.push_errors += len(self.peers)
+            self.push_errors += len(targets)
             return
-        for peer in self.peers:
+        for peer in targets:
             req = urllib.request.Request(
                 f"{peer}/v1/replicate/{key}", data=body, method="POST",
                 headers={"Content-Type": "application/json"})
@@ -837,7 +870,8 @@ class PeerStore(ArtifactStore):
     def stats(self) -> dict[str, Any]:
         return {"hits": self.hits, "misses": self.misses,
                 "errors": self.errors, "pushes": self.pushes,
-                "push_errors": self.push_errors, "peers": list(self.peers)}
+                "push_errors": self.push_errors, "peers": list(self.peers),
+                "routed": self.router is not None}
 
 
 # ---------------------------------------------------------------------------
@@ -971,6 +1005,15 @@ class TieredStore(ArtifactStore):
         return {"ttl": 0, "bytes": 0, "tmp": 0}
 
     # -- introspection -----------------------------------------------------
+    def keys(self) -> list[str]:
+        """This node's manifest: every content address resident in a local
+        tier (what ``GET /v1/replicate/manifest`` advertises to peers —
+        the peer tier is deliberately excluded, a manifest never proxies)."""
+        out = set(self.disk.keys()) if self.disk is not None else set()
+        if self.memory is not None:
+            out.update(k for k in self.memory.keys() if valid_key(k))
+        return sorted(out)
+
     def __contains__(self, key: str) -> bool:
         if self.memory is not None and key in self.memory:
             return True

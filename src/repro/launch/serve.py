@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import os
 import time
 
 
@@ -58,9 +59,56 @@ def _store_from_args(args):
     return build_store(**knobs)
 
 
+def _env(name: str, flag_value, cast=str):
+    """Flag wins; else the REPRO_CLUSTER_* env var; else None."""
+    if flag_value is not None:
+        return flag_value
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    try:
+        return cast(raw)
+    except ValueError:
+        import warnings
+
+        warnings.warn(f"ignoring malformed {name}={raw!r}", stacklevel=2)
+        return None
+
+
+def _cluster_from_args(args, server):
+    """Join a consistent-hash fleet when --cluster-seed (or
+    REPRO_CLUSTER_SEED) names at least one live node.  The first node of a
+    fleet seeds from its own URL; everyone else names any existing member.
+    Returns the started ClusterMembership, or None (standalone — PR 4
+    behavior, byte-identical)."""
+    from repro.core.store import split_peers
+    from repro.serving.cluster import (
+        DEFAULT_REPLICAS, DEFAULT_VNODES, ClusterMembership,
+    )
+
+    seeds = split_peers(_env("REPRO_CLUSTER_SEED", args.cluster_seed))
+    if not seeds:
+        return None
+    self_url = _env("REPRO_CLUSTER_ADVERTISE", args.advertise_url) \
+        or server.url
+    cluster = ClusterMembership(
+        self_url=self_url,
+        seeds=seeds,
+        vnodes=_env("REPRO_CLUSTER_VNODES", args.vnodes, int)
+        or DEFAULT_VNODES,
+        replicas=_env("REPRO_CLUSTER_REPLICAS", args.replicas, int)
+        or DEFAULT_REPLICAS,
+        heartbeat_interval=_env("REPRO_CLUSTER_HEARTBEAT",
+                                args.heartbeat_interval, float) or 1.0,
+        sync_interval=_env("REPRO_CLUSTER_SYNC_INTERVAL",
+                           args.sync_interval, float) or 5.0,
+    )
+    return server.attach_cluster(cluster)
+
+
 def serve_maps(args) -> None:
     """Boot the full stack: backend -> batching queue -> MappingService ->
-    HTTP frontend, then serve until interrupted."""
+    HTTP frontend (-> cluster membership), then serve until interrupted."""
     from repro.serving import MappingHTTPServer, MappingService, batching_factory
 
     factory = batching_factory(
@@ -70,6 +118,7 @@ def serve_maps(args) -> None:
                              backend_factory=factory,
                              n_validate=args.n_validate)
     server = MappingHTTPServer(service, host=args.host, port=args.port)
+    cluster = _cluster_from_args(args, server)
     store = service.store
     if store is None:
         desc = "off"
@@ -82,14 +131,23 @@ def serve_maps(args) -> None:
         desc = f"{disk} memory={mem} entries, peers={peers or 'none'}"
     print(f"mapping service on {server.url}  "
           f"(backend={args.backend}, store={desc})")
+    if cluster is not None:
+        print(f"cluster: self={cluster.self_url} replicas="
+              f"{cluster.replicas} vnodes={cluster.vnodes} "
+              f"heartbeat={cluster.heartbeat_interval}s "
+              f"sync={cluster.sync_interval}s "
+              f"peers_up={cluster.live_peers() or 'none'}")
     print("endpoints: POST /v1/derive  GET|DELETE /v1/artifact/<key>  "
-          "POST /v1/grid  GET /v1/store/stats  GET|POST /v1/replicate/<key>  "
+          "POST /v1/grid  GET /v1/store/stats  GET /v1/cluster  "
+          "GET /v1/replicate/manifest  GET|POST /v1/replicate/<key>  "
           "GET /healthz  GET /metrics")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        if cluster is not None:
+            cluster.close()
         server.httpd.server_close()
 
 
@@ -165,8 +223,33 @@ def main() -> None:
                    help="LRU hot-tier capacity in records (0 disables the "
                         "memory tier; default 256)")
     p.add_argument("--peers", default=None, metavar="URL[,URL...]",
-                   help="sibling mapping servers to replicate with "
-                        "(read-through on miss, write-back on publish)")
+                   help="static sibling servers to replicate with (PR 4 "
+                        "broadcast mesh; superseded by --cluster-seed)")
+    # consistent-hash sharded fleet (see serving/cluster.py); every flag
+    # falls back to its REPRO_CLUSTER_* env var
+    p.add_argument("--cluster-seed", default=None, metavar="URL[,URL...]",
+                   help="join a sharded fleet by asking these live nodes "
+                        "for the membership view (the first node of a "
+                        "fleet seeds from its own URL) "
+                        "[REPRO_CLUSTER_SEED]")
+    p.add_argument("--replicas", type=int, default=None,
+                   help="copies of each record across the fleet "
+                        "(default 2) [REPRO_CLUSTER_REPLICAS]")
+    p.add_argument("--vnodes", type=int, default=None,
+                   help="virtual nodes per server on the hash ring "
+                        "(default 64) [REPRO_CLUSTER_VNODES]")
+    p.add_argument("--sync-interval", type=float, default=None,
+                   metavar="SECONDS",
+                   help="anti-entropy repair cadence (default 5.0) "
+                        "[REPRO_CLUSTER_SYNC_INTERVAL]")
+    p.add_argument("--heartbeat-interval", type=float, default=None,
+                   metavar="SECONDS",
+                   help="membership probe cadence (default 1.0) "
+                        "[REPRO_CLUSTER_HEARTBEAT]")
+    p.add_argument("--advertise-url", default=None, metavar="URL",
+                   help="URL peers should reach this node at (default "
+                        "http://HOST:PORT — set this when binding 0.0.0.0) "
+                        "[REPRO_CLUSTER_ADVERTISE]")
     args = p.parse_args()
 
     if args.serve_maps:

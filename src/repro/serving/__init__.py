@@ -1,9 +1,14 @@
 """Serving layer: the LM prefill/decode engine (``engine``), the
 concurrency-safe mapping-artifact service (``map_service``), and its
-networked form — HTTP frontend (``http``), remote client (``client``), and
-per-model request batching/admission (``batching``)."""
+networked form — HTTP frontend (``http``), keep-alive remote client
+(``client``), per-model request batching/admission (``batching``), and the
+consistent-hash sharded fleet layer (``cluster``: ring placement,
+membership heartbeats, anti-entropy repair)."""
 from repro.serving.batching import (  # noqa: F401
     AdmissionError, BatchingBackend, BatchStats, batching_factory,
+)
+from repro.serving.cluster import (  # noqa: F401
+    ClusterMembership, HashRing,
 )
 from repro.serving.client import (  # noqa: F401
     ClientStats, RemoteMappingService, RemoteServiceError,

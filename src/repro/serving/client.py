@@ -9,6 +9,22 @@ rehydrate through the same wire schema the cache stores
 (``pipeline.result_from_wire``), so a remote ``DerivationResult`` carries
 the same artifact, report, and content address a local one would.
 
+Transport: one pooled keep-alive ``http.client`` connection per host (and
+per thread), so a hot derive costs a request/response on a warm socket
+instead of a TCP handshake + connect per call.  A pooled socket that died
+while idle (server restart, keep-alive reaped) reconnects once silently
+before the normal retry/backoff machinery sees anything.  Constructing with
+``keep_alive=False`` sends ``Connection: close`` per request — the
+pre-PR-5 behavior, kept as the benchmark baseline.
+
+Cluster awareness: against a sharded fleet (``--cluster-seed``), the client
+fetches the ``GET /v1/cluster`` view once, builds the same
+:class:`~repro.serving.cluster.HashRing` the servers use, and — as soon as
+a cell's content address is known from its first response — hashes locally
+and sends repeat derives straight to the key's owner, skipping the
+server-side forwarding hop.  Against a standalone server (404 on
+/v1/cluster) all of this degrades to plain single-host behavior.
+
 Failure policy, in order:
 
   * transport errors (connection refused / reset / timeout) retry with
@@ -17,6 +33,8 @@ Failure policy, in order:
     us to back off;
   * other HTTP errors (400/404/500) raise :class:`RemoteServiceError`
     immediately — retrying a malformed or failing request won't help;
+  * an owner-routed request whose owner is unreachable falls back to the
+    configured home URL (and refreshes the cluster view);
   * when every attempt fails *and* a ``fallback`` service was provided, the
     request is served locally (graceful degradation: the client machine
     re-derives rather than erroring out, at local inference cost).
@@ -24,18 +42,22 @@ Failure policy, in order:
 from __future__ import annotations
 
 import dataclasses
+import http.client
 import json
+import threading
 import time
-import urllib.error
-import urllib.request
 from typing import Callable, Iterable, Iterator, Sequence
+from urllib.parse import urlsplit
 
 from repro.core import pipeline
 from repro.core.artifact import MappingArtifact
 from repro.core.domains import Domain
+from repro.core.store import valid_key
 from repro.serving.map_service import MappingService
 
 _RETRYABLE_STATUS = (503,)
+_TRANSPORT_ERRORS = (http.client.HTTPException, ConnectionError,
+                     TimeoutError, OSError)
 
 
 class RemoteServiceError(RuntimeError):
@@ -45,6 +67,16 @@ class RemoteServiceError(RuntimeError):
     def __init__(self, message: str, status: int | None = None):
         super().__init__(message)
         self.status = status
+
+
+class _StatusError(Exception):
+    """Internal: the server answered with a definite HTTP error status."""
+
+    def __init__(self, status: int, reason: str, detail: str):
+        super().__init__(f"HTTP {status}: {detail or reason}")
+        self.status = status
+        self.reason = reason
+        self.detail = detail
 
 
 def _falls_back(e: RemoteServiceError) -> bool:
@@ -62,9 +94,57 @@ class ClientStats:
     retries: int = 0           # extra attempts after a retryable failure
     fallbacks: int = 0         # requests served by the local fallback
     server_cache_hits: int = 0  # results the server marked cache_hit
+    reconnects: int = 0        # pooled sockets found dead + reopened
+    routed: int = 0            # requests sent straight to the ring owner
+    reroutes: int = 0          # owner unreachable -> retried via home URL
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class _Response:
+    """Keep-alive-aware response wrapper.  The connection is *checked out*
+    of the pool for the response's whole lifetime (so a nested call made
+    while a grid stream is suspended gets its own connection instead of
+    clobbering the in-flight one); ``close`` checks a fully-drained
+    response's connection back in, and drops an abandoned (mid-stream) or
+    close-marked one — a half-read socket can never be reused."""
+
+    def __init__(self, owner: "RemoteMappingService", netloc: str,
+                 conn, resp):
+        self._owner = owner
+        self._netloc = netloc
+        self._conn = conn
+        self._resp = resp
+        self._closed = False
+        self.status = resp.status
+
+    def read(self) -> bytes:
+        return self._resp.read()
+
+    def readline(self) -> bytes:
+        return self._resp.readline()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        resp = self._resp
+        reusable = resp.isclosed() and not resp.will_close
+        resp.close()
+        if reusable:
+            self._owner._checkin(self._netloc, self._conn)
+        else:
+            try:
+                self._conn.close()
+            except Exception:  # noqa: BLE001 — teardown is best-effort
+                pass
+
+    def __enter__(self) -> "_Response":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class RemoteMappingService:
@@ -77,63 +157,214 @@ class RemoteMappingService:
         retries: int = 3,
         backoff: float = 0.1,
         fallback: MappingService | Callable[[], MappingService] | None = None,
+        keep_alive: bool = True,
     ):
         self.url = url.rstrip("/")
         self.timeout = timeout
         self.retries = retries
         self.backoff = backoff
+        self.keep_alive = keep_alive
         self.stats = ClientStats()
         self._fallback = fallback
         self._fallback_service: MappingService | None = None
+        self._tls = threading.local()  # per-thread connection pool
+        self._ring = None              # HashRing once the view is fetched
+        self._ring_checked = False     # 404 = standalone server: stay plain
+        self._cell_keys: dict[tuple[str, str, int], str] = {}
+
+    # -- connection pool ---------------------------------------------------
+    def _conns(self) -> dict:
+        conns = getattr(self._tls, "conns", None)
+        if conns is None:
+            conns = self._tls.conns = {}
+        return conns
+
+    def _checkout(self, netloc: str, scheme: str):
+        """Take the pooled connection for ``netloc`` (or build a fresh one).
+        Checked-out connections are owned by exactly one in-flight response
+        — a concurrent/nested call finds the pool slot empty and gets its
+        own connection instead of corrupting the stream in progress."""
+        conn = self._conns().pop(netloc, None)
+        if conn is None:
+            cls = (http.client.HTTPSConnection if scheme == "https"
+                   else http.client.HTTPConnection)
+            conn = cls(netloc, timeout=self.timeout)
+        return conn
+
+    def _checkin(self, netloc: str, conn) -> None:
+        conns = self._conns()
+        if netloc in conns:  # a nested call repopulated the slot meanwhile
+            try:
+                conn.close()
+            except Exception:  # noqa: BLE001 — teardown is best-effort
+                pass
+        else:
+            conns[netloc] = conn
+
+    def close(self) -> None:
+        """Close this thread's pooled connections (other threads' pools are
+        reaped when the client is collected)."""
+        conns = self._conns()
+        for netloc in list(conns):
+            conn = conns.pop(netloc, None)
+            try:
+                conn.close()
+            except Exception:  # noqa: BLE001 — teardown is best-effort
+                pass
 
     # -- transport ---------------------------------------------------------
+    def _request_once(self, base: str, method: str, path: str,
+                      data: bytes | None, headers: dict) -> _Response:
+        parts = urlsplit(base)
+        netloc = parts.netloc
+        conn = self._checkout(netloc, parts.scheme)
+        pooled = conn.sock is not None
+        try:
+            conn.request(method, path, body=data, headers=headers)
+            resp = conn.getresponse()
+        except _TRANSPORT_ERRORS:
+            try:
+                conn.close()
+            except Exception:  # noqa: BLE001
+                pass
+            if not pooled:
+                raise  # a fresh connect failed: genuine transport failure
+            # the pooled socket died while idle (keep-alive reaped, server
+            # restarted): reconnect once before the retry/backoff machinery
+            # hears about it — derives are idempotent, so a resend is safe
+            self.stats.reconnects += 1
+            conn = self._checkout(netloc, parts.scheme)
+            try:
+                conn.request(method, path, body=data, headers=headers)
+                resp = conn.getresponse()
+            except _TRANSPORT_ERRORS:
+                try:
+                    conn.close()
+                except Exception:  # noqa: BLE001
+                    pass
+                raise
+        return _Response(self, netloc, conn, resp)
+
     def _open(self, path: str, body: dict | None = None,
-              method: str | None = None):
+              method: str | None = None, base: str | None = None) -> _Response:
         data = json.dumps(body).encode() if body is not None else None
-        req = urllib.request.Request(
-            f"{self.url}{path}", data=data, method=method,
-            headers={"Content-Type": "application/json"} if data else {},
-        )
-        return urllib.request.urlopen(req, timeout=self.timeout)  # noqa: S310
+        headers = {"Content-Type": "application/json"} if data else {}
+        if not self.keep_alive:
+            headers["Connection"] = "close"
+        method = method or ("POST" if data is not None else "GET")
+        resp = self._request_once(base or self.url, method, path, data,
+                                  headers)
+        if resp.status >= 400:
+            raw = resp.read()
+            resp.close()
+            detail = ""
+            try:
+                detail = json.loads(raw).get("error", "")
+            except Exception:  # noqa: BLE001 — detail is best-effort
+                pass
+            raise _StatusError(resp.status, "", detail)
+        return resp
 
     def _attempts(self, path: str, body: dict | None,
-                  method: str | None = None):
-        """Yield open responses, retrying transport/503 failures with
-        backoff; raises the terminal error when attempts are exhausted."""
+                  method: str | None = None,
+                  base: str | None = None) -> _Response:
+        """Open a response, retrying transport/503 failures with backoff;
+        raises the terminal error when attempts are exhausted."""
         last: Exception | None = None
         for attempt in range(self.retries + 1):
             if attempt:
                 time.sleep(self.backoff * (2 ** (attempt - 1)))
                 self.stats.retries += 1
             try:
-                return self._open(path, body, method)
-            except urllib.error.HTTPError as e:
-                if e.code in _RETRYABLE_STATUS:
+                return self._open(path, body, method, base=base)
+            except _StatusError as e:
+                if e.status in _RETRYABLE_STATUS:
                     last = e
                     continue
-                detail = ""
-                try:
-                    detail = json.loads(e.read()).get("error", "")
-                except Exception:  # noqa: BLE001 — detail is best-effort
-                    pass
                 raise RemoteServiceError(
-                    f"{path} -> HTTP {e.code}: {detail or e.reason}",
-                    status=e.code) from e
-            except (urllib.error.URLError, ConnectionError, TimeoutError,
-                    OSError) as e:
+                    f"{path} -> {e}", status=e.status) from e
+            except _TRANSPORT_ERRORS as e:
                 last = e
                 continue
-        status = last.code if isinstance(last, urllib.error.HTTPError) else None
+        status = last.status if isinstance(last, _StatusError) else None
         raise RemoteServiceError(
             f"{path} unreachable after {self.retries + 1} attempts: {last}",
             status=status) from last
 
     def _call_json(self, path: str, body: dict | None = None,
-                   method: str | None = None) -> dict:
-        with self._attempts(path, body, method) as resp:
+                   method: str | None = None, base: str | None = None) -> dict:
+        with self._attempts(path, body, method, base=base) as resp:
             payload = json.loads(resp.read())
         self.stats.remote_requests += 1
         return payload
+
+    # -- cluster routing ---------------------------------------------------
+    def _cluster_ring(self):
+        """The fleet's hash ring, fetched lazily from ``GET /v1/cluster``
+        (None against a standalone server).  Cached until an owner-routed
+        request fails, which invalidates and refetches.  A definite 404 is
+        remembered (the server *is* standalone); a transport failure is
+        not — one restart blip must not disable owner routing for the
+        client's whole lifetime."""
+        if self._ring_checked:
+            return self._ring
+        self._ring_checked = True
+        try:
+            with self._open("/v1/cluster") as resp:
+                view = json.loads(resp.read())
+        except _StatusError:
+            self._ring = None  # standalone node: stay plain, don't re-ask
+            return None
+        except (*_TRANSPORT_ERRORS, ValueError):
+            self._ring = None
+            self._ring_checked = False  # transient: retry on the next call
+            return None
+        from repro.serving.cluster import (
+            DEFAULT_REPLICAS, DEFAULT_VNODES, HashRing,
+        )
+        nodes = [n.get("url") for n in view.get("nodes", [])
+                 if isinstance(n, dict) and n.get("status") == "up"]
+        self._ring = HashRing(
+            [n for n in nodes if n],
+            vnodes=int(view.get("vnodes", DEFAULT_VNODES)),
+            replicas=int(view.get("replicas", DEFAULT_REPLICAS)))
+        return self._ring
+
+    def _invalidate_ring(self) -> None:
+        self._ring = None
+        self._ring_checked = False
+
+    def _owner_url(self, key: str | None) -> str | None:
+        """Where a request for ``key`` should land: the ring's primary
+        owner, or None when unknown / unclustered / already the home URL."""
+        if key is None:
+            return None
+        ring = self._cluster_ring()
+        if ring is None:
+            return None
+        owners = ring.owners(key)
+        if not owners or owners[0] == self.url:
+            return None
+        return owners[0]
+
+    def _call_routed(self, path: str, body: dict | None, key: str | None,
+                     method: str | None = None) -> dict:
+        """``_call_json`` addressed to ``key``'s ring owner when one is
+        known, degrading to the home URL when the owner is unreachable —
+        a definite answer from the owner (400/404/500) stands."""
+        owner = self._owner_url(key)
+        if owner is None:
+            return self._call_json(path, body, method)
+        try:
+            payload = self._call_json(path, body, method, base=owner)
+            self.stats.routed += 1
+            return payload
+        except RemoteServiceError as e:
+            if not _falls_back(e):
+                raise
+            self.stats.reroutes += 1
+            self._invalidate_ring()  # the view that routed us is stale
+            return self._call_json(path, body, method)
 
     # -- fallback ----------------------------------------------------------
     def _local(self) -> MappingService | None:
@@ -145,19 +376,36 @@ class RemoteMappingService:
                 fb, MappingService) else fb  # type: ignore[assignment]
         return self._fallback_service
 
+    # -- key validation ----------------------------------------------------
+    def _require_key(self, key: str) -> None:
+        """Fail fast on a malformed content address — the server would
+        answer 400 anyway, so don't pay the round-trip to hear it."""
+        if not valid_key(key):
+            raise RemoteServiceError(
+                f"invalid key {key!r}: content addresses are 64 lowercase "
+                "hex characters", status=400)
+
     # -- MappingService surface --------------------------------------------
     def derive(self, domain: str | Domain, model: str,
                stage: int = 100) -> pipeline.DerivationResult:
         name = domain.name if isinstance(domain, Domain) else domain
+        cell = (name, model, stage)
         try:
-            payload = self._call_json(
-                "/v1/derive", {"domain": name, "model": model, "stage": stage})
+            payload = self._call_routed(
+                "/v1/derive", {"domain": name, "model": model,
+                               "stage": stage},
+                key=self._cell_keys.get(cell))
         except RemoteServiceError as e:
             local = self._local()
             if local is None or not _falls_back(e):
                 raise
             self.stats.fallbacks += 1
             return local.derive(domain, model, stage)
+        key = payload.get("key")
+        if isinstance(key, str) and valid_key(key):
+            # remember the cell's content address: repeats hash locally and
+            # go straight to the owner, skipping the forwarding hop
+            self._cell_keys[cell] = key
         res = pipeline.result_from_wire(payload)
         if res.cache_hit:
             self.stats.server_cache_hits += 1
@@ -170,17 +418,29 @@ class RemoteMappingService:
     def fetch_artifact(self, key: str) -> dict:
         """GET /v1/artifact/<key>: the raw {record, artifact} payload for a
         content address (no derivation is triggered)."""
+        self._require_key(key)
         return self._call_json(f"/v1/artifact/{key}")
 
     def delete_artifact(self, key: str) -> dict:
         """DELETE /v1/artifact/<key>: drop one record from the server's
         local tiers (per-node ops action; peers keep their copies)."""
+        self._require_key(key)
         return self._call_json(f"/v1/artifact/{key}", method="DELETE")
 
     def pull_record(self, key: str) -> dict:
         """GET /v1/replicate/<key>: the raw local record (the same surface
         PeerStore reads — memory/disk only, no peer recursion server-side)."""
+        self._require_key(key)
         return self._call_json(f"/v1/replicate/{key}")
+
+    def manifest(self) -> dict:
+        """GET /v1/replicate/manifest: the server's local key manifest."""
+        return self._call_json("/v1/replicate/manifest")
+
+    def cluster_view(self) -> dict:
+        """GET /v1/cluster: the server's membership view (404 -> error on a
+        standalone node)."""
+        return self._call_json("/v1/cluster")
 
     def store_stats(self) -> dict:
         """GET /v1/store/stats: per-tier counters + disk usage."""
@@ -218,7 +478,7 @@ class RemoteMappingService:
                 # as the documented error type, not a raw socket exception
                 try:
                     raw = resp.readline()
-                except (ConnectionError, TimeoutError, OSError) as e:
+                except _TRANSPORT_ERRORS as e:
                     raise RemoteServiceError(
                         f"/v1/grid stream broke mid-sweep: {e}") from e
                 if not raw:

@@ -1,0 +1,457 @@
+"""Consistent-hash sharded fleet: ring placement, membership, anti-entropy.
+
+PR 4's replication mesh was static — every node pushed every record to every
+``--peers`` sibling, so a fleet of N servers held N copies of the whole
+store and an operator re-wired flags to grow it.  This module makes the
+fleet self-organizing and sharded:
+
+  * :class:`HashRing`          — consistent hashing with virtual nodes.
+    Each record key maps deterministically to ``replicas`` owner nodes (the
+    first K distinct nodes clockwise from the key's point), so N servers
+    hold ~K/N of the store each, and a join/leave remaps only the keys
+    adjacent to the changed node instead of reshuffling everything.
+  * :class:`ClusterMembership` — seed-based discovery: a new node is told
+    one live node (``--cluster-seed``) and learns the rest through the
+    ``GET /v1/cluster`` view-exchange endpoint.  A periodic heartbeat probes
+    every known node; a node that stops answering past ``down_after`` is
+    marked down and drops out of the ring, and a rejoining node (same URL)
+    is folded back in on its first successful probe.
+  * anti-entropy repair        — every ``sync_interval`` the node exchanges
+    key manifests (``GET /v1/replicate/manifest``) with its live peers and
+    pulls any record it *owns* but lacks.  That is how a node recovers
+    publishes it missed while down, and how the fleet restores the
+    replication factor after an owner dies (the ring reassigns the key; the
+    new owner repairs itself from the surviving replica) — all with zero
+    additional LLM inferences.
+
+Ownership is advisory, not authoritative: every node can still serve any
+record it holds, and a node that cannot reach an owner derives locally.
+The ring only decides *placement* (who stores what) and *routing* (where
+to look first) — correctness never depends on two nodes agreeing on the
+view, because records are immutable per content address.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Callable, Iterable
+from urllib.parse import quote
+
+from repro.core.store import valid_key, verify_envelope
+
+DEFAULT_VNODES = 64
+DEFAULT_REPLICAS = 2
+
+
+def _hash(data: str) -> int:
+    """Ring position of a node vnode or a record key: the first 8 bytes of
+    sha256, so every node (and the client) computes identical placements
+    from the same view."""
+    return int.from_bytes(hashlib.sha256(data.encode()).digest()[:8], "big")
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes and K-successor placement.
+
+    Deterministic by construction: the ring is a pure function of the node
+    URL set and ``vnodes`` (insertion order is irrelevant), so any two
+    parties with the same view route identically.  ``owners(key)`` returns
+    the first ``replicas`` *distinct* nodes clockwise from the key's point
+    — fewer when the ring is smaller than K."""
+
+    def __init__(self, nodes: Iterable[str] = (), vnodes: int = DEFAULT_VNODES,
+                 replicas: int = DEFAULT_REPLICAS):
+        self.vnodes = max(1, int(vnodes))
+        self.replicas = max(1, int(replicas))
+        self._points: list[tuple[int, str]] = []  # sorted (position, node)
+        for node in nodes:
+            self.add(node)
+
+    # -- membership --------------------------------------------------------
+    def add(self, node: str) -> None:
+        if node in self:
+            return
+        for i in range(self.vnodes):
+            bisect.insort(self._points, (_hash(f"{node}#{i}"), node))
+
+    def remove(self, node: str) -> None:
+        self._points = [(p, n) for p, n in self._points if n != node]
+
+    @property
+    def nodes(self) -> list[str]:
+        return sorted({n for _, n in self._points})
+
+    def __contains__(self, node: str) -> bool:
+        return any(n == node for _, n in self._points)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    # -- placement ---------------------------------------------------------
+    def owners(self, key: str, n: int | None = None) -> list[str]:
+        """The ``n`` (default ``replicas``) distinct nodes that own ``key``,
+        in preference order (primary first).  Empty ring -> empty list."""
+        if not self._points:
+            return []
+        want = self.replicas if n is None else max(1, int(n))
+        idx = bisect.bisect_left(self._points, (_hash(key), ""))
+        out: list[str] = []
+        for step in range(len(self._points)):
+            node = self._points[(idx + step) % len(self._points)][1]
+            if node not in out:
+                out.append(node)
+                if len(out) >= want:
+                    break
+        return out
+
+    def primary(self, key: str) -> str | None:
+        owners = self.owners(key, 1)
+        return owners[0] if owners else None
+
+
+class _Node:
+    """One known fleet member, as seen from this node."""
+
+    __slots__ = ("url", "up", "last_seen", "failures")
+
+    def __init__(self, url: str):
+        self.url = url
+        self.up = False
+        self.last_seen: float | None = None  # monotonic; None = never
+        self.failures = 0                    # consecutive failed probes
+
+
+class ClusterMembership:
+    """This node's view of the fleet + the loops that keep it honest.
+
+    ``start()`` launches two daemon threads: the heartbeat loop (probe every
+    known node via ``GET /v1/cluster``, merge the URLs each answer reveals,
+    mark nodes up/down) and the anti-entropy loop (manifest exchange +
+    owned-key repair against live peers).  Both are also callable directly
+    (``heartbeat_now`` / ``sync_now``) so tests and operators can force a
+    round without waiting out an interval."""
+
+    def __init__(self, self_url: str, seeds: Iterable[str] = (),
+                 vnodes: int = DEFAULT_VNODES,
+                 replicas: int = DEFAULT_REPLICAS,
+                 heartbeat_interval: float = 1.0,
+                 down_after: float | None = None,
+                 forget_after: float | None = None,
+                 sync_interval: float = 5.0,
+                 probe_timeout: float = 2.0,
+                 store=None):
+        self.self_url = self_url.rstrip("/")
+        self.vnodes = max(1, int(vnodes))
+        self.replicas = max(1, int(replicas))
+        self.heartbeat_interval = heartbeat_interval
+        self.down_after = (3.0 * heartbeat_interval if down_after is None
+                           else down_after)
+        # a down node is kept (for rejoin tracking) this long past its last
+        # successful probe, then forgotten entirely — without this, every
+        # decommissioned URL would be probed every round forever
+        self.forget_after = (max(30.0, 10.0 * self.down_after)
+                             if forget_after is None else forget_after)
+        self.sync_interval = sync_interval
+        self.probe_timeout = probe_timeout
+        self.store = store  # TieredStore (anti-entropy repairs through it)
+        self._nodes: dict[str, _Node] = {}
+        self._aliases: set[str] = set()  # URLs discovered to be *us*
+        self._mu = threading.Lock()
+        self._ring = HashRing([self.self_url], vnodes=self.vnodes,
+                              replicas=self.replicas)
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        # counters
+        self.heartbeats = 0
+        self.probe_failures = 0
+        self.transitions = 0          # up<->down flips observed
+        self.manifest_exchanges = 0
+        self.repairs = 0              # records pulled by anti-entropy
+        self.repair_errors = 0
+        self.rebalanced = 0           # non-owned copies dropped post-churn
+        self.forgotten = 0            # dead nodes pruned from the view
+        self._seeds: set[str] = set()
+        for seed in seeds:
+            seed = (seed or "").strip().rstrip("/")
+            if seed and seed != self.self_url:
+                self._seeds.add(seed)  # seeds are never forgotten: a fleet
+                self._nodes[seed] = _Node(seed)  # must form even if the
+                # seed boots after its joiners
+
+    # -- ring views --------------------------------------------------------
+    def _rebuild_ring(self) -> None:
+        """Callers hold ``_mu``."""
+        live = [self.self_url] + [n.url for n in self._nodes.values() if n.up]
+        self._ring = HashRing(live, vnodes=self.vnodes, replicas=self.replicas)
+
+    @property
+    def ring(self) -> HashRing:
+        with self._mu:
+            return self._ring
+
+    def owners(self, key: str) -> list[str]:
+        return self.ring.owners(key)
+
+    def owns(self, key: str) -> bool:
+        return self.self_url in self.ring.owners(key)
+
+    def replica_peers(self, key: str) -> list[str]:
+        """The owner URLs a :class:`~repro.core.store.PeerStore` should
+        route ``key`` to — the K replicas, this node excluded.  This is the
+        router that turns PR 4's broadcast replication into sharding."""
+        return [u for u in self.ring.owners(key) if u != self.self_url]
+
+    def live_peers(self) -> list[str]:
+        with self._mu:
+            return sorted(n.url for n in self._nodes.values() if n.up)
+
+    # -- view exchange (the /v1/cluster payload) ---------------------------
+    def view(self) -> dict[str, Any]:
+        now = time.monotonic()
+        with self._mu:
+            nodes = [{"url": self.self_url, "status": "up", "self": True}]
+            for n in sorted(self._nodes.values(), key=lambda n: n.url):
+                nodes.append({
+                    "url": n.url,
+                    "status": "up" if n.up else "down",
+                    "age_seconds": (None if n.last_seen is None
+                                    else now - n.last_seen),
+                })
+        return {"self": self.self_url, "replicas": self.replicas,
+                "vnodes": self.vnodes, "nodes": nodes}
+
+    def stats(self) -> dict[str, Any]:
+        with self._mu:
+            up = sum(1 for n in self._nodes.values() if n.up) + 1
+            known = len(self._nodes) + 1
+        return {"self": self.self_url, "nodes_up": up, "nodes_known": known,
+                "replicas": self.replicas, "vnodes": self.vnodes,
+                "heartbeats": self.heartbeats,
+                "probe_failures": self.probe_failures,
+                "transitions": self.transitions,
+                "manifest_exchanges": self.manifest_exchanges,
+                "repairs": self.repairs, "repair_errors": self.repair_errors,
+                "rebalanced": self.rebalanced, "forgotten": self.forgotten}
+
+    # -- membership loop ---------------------------------------------------
+    def _get_json(self, url: str, path: str):
+        with urllib.request.urlopen(  # noqa: S310 — operator-set URLs
+                f"{url}{path}", timeout=self.probe_timeout) as resp:
+            return json.loads(resp.read())
+
+    def observe(self, url: str) -> None:
+        """Fold in a node that just contacted *us* (the ``?from=`` announce
+        on a heartbeat probe) as a *candidate*.  This is what makes
+        discovery symmetric: a seed learns its joiners the moment they
+        first probe it — heartbeats alone only discover in the
+        seed->joiner direction.  The candidate joins the ring only once
+        our own next heartbeat probes it successfully: an unauthenticated
+        announce must never place an unverified URL into routing."""
+        url = (url or "").strip().rstrip("/")
+        if not url or url == self.self_url:
+            return
+        with self._mu:
+            if url not in self._nodes and url not in self._aliases:
+                self._nodes[url] = _Node(url)
+
+    def _probe(self, url: str) -> list[str]:
+        """Probe one node; returns the URLs its view revealed (empty on
+        failure).  Only URLs the peer itself reports *up* are merged —
+        gossiping dead nodes around would keep them probed fleet-wide
+        forever.  Up/down transitions and ring rebuilds happen here."""
+        try:
+            view = self._get_json(
+                url, f"/v1/cluster?from={quote(self.self_url, safe='')}")
+            if str(view.get("self", "")).rstrip("/") == self.self_url:
+                # the "peer" answered as *us*: ``url`` is an alias of this
+                # node (e.g. the documented self-seed bootstrap spelled
+                # localhost against a 127.0.0.1 bind).  Joining the ring
+                # under two names would silently collapse the replication
+                # factor — both "replicas" of a key could be one machine.
+                with self._mu:
+                    self._aliases.add(url)
+                    node = self._nodes.pop(url, None)
+                    if node is not None and node.up:
+                        self.transitions += 1
+                        self._rebuild_ring()
+                return []
+            revealed = [str(n.get("url", "")) for n in view.get("nodes", [])
+                        if isinstance(n, dict) and n.get("status") == "up"]
+            ok = True
+        except (urllib.error.URLError, ConnectionError, TimeoutError,
+                OSError, ValueError):
+            revealed, ok = [], False
+        now = time.monotonic()
+        with self._mu:
+            node = self._nodes.get(url)
+            if node is None:  # removed concurrently — nothing to record
+                return revealed if ok else []
+            if ok:
+                node.last_seen = now
+                node.failures = 0
+                if not node.up:  # fresh join or rejoin
+                    node.up = True
+                    self.transitions += 1
+                    self._rebuild_ring()
+            else:
+                self.probe_failures += 1
+                node.failures += 1
+                # a never-seen node is down immediately; a known-good one
+                # gets down_after of grace before it leaves the ring
+                if node.up and (node.last_seen is None
+                                or now - node.last_seen > self.down_after):
+                    node.up = False
+                    self.transitions += 1
+                    self._rebuild_ring()
+        return revealed if ok else []
+
+    def _forget_dead(self) -> None:
+        """Prune down nodes past ``forget_after`` (and never-seen
+        candidates after a few failed probes) so decommissioned URLs stop
+        costing a probe per round.  Seeds are exempt: the fleet must still
+        form when the seed boots after its joiners.  A pruned node that
+        comes back re-announces itself on its own next probe."""
+        now = time.monotonic()
+        with self._mu:
+            for url in list(self._nodes):
+                node = self._nodes[url]
+                if node.up or url in self._seeds:
+                    continue
+                dead = (node.failures >= 3 if node.last_seen is None
+                        else now - node.last_seen > self.forget_after)
+                if dead:
+                    del self._nodes[url]
+                    self.forgotten += 1
+
+    def heartbeat_now(self) -> None:
+        """One full membership round: probe every known node, folding in any
+        URL a view reveals (and probing the newcomers in the same round, so
+        a single heartbeat after a seed bootstrap reaches the whole fleet)."""
+        self.heartbeats += 1
+        probed: set[str] = set()
+        while True:
+            with self._mu:
+                pending = [u for u in self._nodes if u not in probed]
+            if not pending:
+                break
+            for url in pending:
+                probed.add(url)
+                for revealed in self._probe(url):
+                    revealed = revealed.rstrip("/")
+                    if not revealed or revealed == self.self_url:
+                        continue
+                    with self._mu:
+                        if revealed not in self._nodes \
+                                and revealed not in self._aliases:
+                            self._nodes[revealed] = _Node(revealed)
+        self._forget_dead()
+
+    # -- anti-entropy repair -----------------------------------------------
+    def sync_now(self) -> int:
+        """One repair round: exchange key manifests with every live peer,
+        pull each record this node owns but lacks, then drop local copies
+        of records this node does *not* own once every owner verifiably
+        holds them (self-healing back to exactly K copies after churn —
+        e.g. the extra replica a node keeps after a dead owner rejoins).
+        Returns records repaired."""
+        store = self.store
+        if store is None:
+            return 0
+        repaired = 0
+        manifests: dict[str, set] = {}  # peer -> keys it advertises
+        for peer in self.live_peers():
+            try:
+                manifest = self._get_json(peer, "/v1/replicate/manifest")
+                keys = manifest.get("keys", [])
+            except (urllib.error.URLError, ConnectionError, TimeoutError,
+                    OSError, ValueError):
+                self.repair_errors += 1
+                continue
+            self.manifest_exchanges += 1
+            manifests[peer] = {k for k in keys if valid_key(k)}
+            ring = self.ring
+            for key in manifests[peer]:
+                if self.self_url not in ring.owners(key):
+                    continue
+                if key in store:  # already resident locally
+                    continue
+                try:
+                    rec = self._get_json(peer, f"/v1/replicate/{key}")
+                except (urllib.error.URLError, ConnectionError, TimeoutError,
+                        OSError, ValueError):
+                    self.repair_errors += 1
+                    continue
+                if not verify_envelope(key, rec):
+                    self.repair_errors += 1
+                    continue
+                # store_local, not store: a repair pull must never echo a
+                # push back out (the surviving replica already holds it)
+                store.store_local(key, rec)
+                self.repairs += 1
+                repaired += 1
+        self._rebalance(manifests)
+        return repaired
+
+    def _rebalance(self, manifests: dict[str, set]) -> None:
+        """Drop local records this node does not own, but only when every
+        ring owner's manifest (fetched this round) lists the record *and*
+        the primary owner still serves it right now — the manifests may
+        have gone stale during the repair pulls (an owner's TTL/size
+        eviction could have run meanwhile), and a handoff must never
+        destroy what might be the last copy.  Better to keep a stray
+        replica than to re-pay an LLM inference."""
+        store = self.store
+        if store is None or not manifests:
+            return
+        ring = self.ring
+        for key in store.keys():
+            owners = ring.owners(key)
+            if not owners or self.self_url in owners:
+                continue
+            if not all(o in manifests and key in manifests[o]
+                       for o in owners):
+                continue
+            try:  # freshness re-check, immediately before the delete
+                rec = self._get_json(owners[0], f"/v1/replicate/{key}")
+            except (urllib.error.URLError, ConnectionError, TimeoutError,
+                    OSError, ValueError):
+                continue
+            if verify_envelope(key, rec) and store.delete(key):
+                self.rebalanced += 1
+
+    # -- lifecycle ---------------------------------------------------------
+    def _loop(self, interval: float, tick: Callable[[], Any],
+              name: str) -> None:
+        thread = threading.Thread(
+            name=name, daemon=True,
+            target=lambda: self._run_loop(interval, tick))
+        self._threads.append(thread)
+        thread.start()
+
+    def _run_loop(self, interval: float, tick: Callable[[], Any]) -> None:
+        while not self._stop.wait(interval):
+            try:
+                tick()
+            except Exception:  # noqa: BLE001 — loops must survive anything
+                pass
+
+    def start(self) -> "ClusterMembership":
+        """Bootstrap (one immediate heartbeat so the seed's view lands
+        before the first request) and launch the periodic loops."""
+        self.heartbeat_now()
+        self.sync_now()
+        self._loop(self.heartbeat_interval, self.heartbeat_now,
+                   "cluster-heartbeat")
+        self._loop(self.sync_interval, self.sync_now, "cluster-antientropy")
+        return self
+
+    def close(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads.clear()

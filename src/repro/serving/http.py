@@ -13,6 +13,12 @@ sharing across machines means a network surface.  This module wraps a
     POST   /v1/grid             {domains, models, stages} -> NDJSON stream,
                                 one wire payload per resolved cell
     GET    /v1/store/stats      per-tier store counters + disk usage
+                                (+ cluster/ring state when clustered)
+    GET    /v1/cluster          membership view exchange: this node's view
+                                of the fleet + ring parameters (404 when
+                                the node runs standalone)
+    GET    /v1/replicate/manifest  this node's key manifest (local tiers) —
+                                the anti-entropy repair surface
     GET    /v1/replicate/<key>  replication pull: the raw local record
                                 (memory/disk only — a peer's question never
                                 triggers our own peer fetch)
@@ -21,7 +27,7 @@ sharing across machines means a network surface.  This module wraps a
     GET    /healthz             liveness probe
     GET    /metrics             ServiceStats + per-endpoint latency
                                 percentiles + batching/admission counters +
-                                per-tier store counters
+                                per-tier store counters + cluster state
 
 Every thread the server spawns funnels into the *same* service instance, so
 the coalescing table and artifact-store file lock built in PR 2 are exactly
@@ -33,14 +39,31 @@ queue maps to 503 — the server sheds load instead of queueing unboundedly.
 The two /v1/replicate endpoints are the wire surface of
 :class:`~repro.core.store.PeerStore` — point two servers at each other with
 ``--peers`` and a derivation on either is a hit on both.
+
+Responses speak HTTP/1.1 with explicit Content-Length, so a client holding
+a pooled connection (``serving/client.py``) reuses it across requests
+instead of paying a TCP handshake per derive; the /v1/grid NDJSON stream is
+the one close-delimited response (its length is unknowable up front).
+
+With a :class:`~repro.serving.cluster.ClusterMembership` attached
+(``--cluster-seed``), the node participates in a consistent-hash sharded
+fleet: a POST /v1/derive whose content address this node does not own is
+forwarded to the ring owner (one hop at most — forwarded requests carry
+``X-Repro-Forwarded`` and are always served where they land), replication
+pushes are scoped to the key's K replicas, and the anti-entropy loop
+repairs owned-but-missing records through the manifest endpoint.
 """
 from __future__ import annotations
 
 import collections
 import json
+import socket
 import threading
 import time
+import urllib.error
+import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlsplit
 
 from repro.core import pipeline
 from repro.core import store as store_mod
@@ -49,6 +72,11 @@ from repro.serving.batching import AdmissionError, BatchingBackend
 from repro.serving.map_service import MappingService
 
 MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
+
+#: marks a derive that already took its one forwarding hop — the receiving
+#: node serves it locally even if its ring view disagrees, so two nodes with
+#: momentarily different views can never bounce a request between them
+FORWARDED_HEADER = "X-Repro-Forwarded"
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -94,8 +122,17 @@ class MappingHTTPServer:
     def __init__(self, service: MappingService, host: str = "127.0.0.1",
                  port: int = 0):
         self.service = service
+        self.cluster = None  # ClusterMembership once attach_cluster() ran
+        self.forwarded = 0          # derives proxied to their ring owner
+        self.forward_errors = 0     # owner unreachable -> served locally
+        # below the client's default 60s timeout: a stalled owner must not
+        # pin forwarding threads past the point the caller has given up —
+        # the forward degrades to local derivation instead
+        self.forward_timeout = 30.0
         self._metrics: dict[str, _EndpointMetrics] = {}
         self._metrics_mu = threading.Lock()
+        self._conn_sockets: set = set()  # live keep-alive connections
+        self._conn_mu = threading.Lock()
         handler = _make_handler(self)
         self.httpd = ThreadingHTTPServer((host, port), handler)
         self.httpd.daemon_threads = True
@@ -107,6 +144,26 @@ class MappingHTTPServer:
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
 
+    def attach_cluster(self, cluster) -> "ClusterMembership":  # noqa: F821
+        """Join this node to a sharded fleet: wire the membership's ring
+        into the store's peer tier (owner-scoped pulls and pushes instead of
+        the static broadcast mesh), hand the store to the anti-entropy loop,
+        and start the heartbeat/sync threads.  Call after construction —
+        membership identity is this server's URL, which an ephemeral-port
+        bind only knows post-bind."""
+        from repro.core.store import PeerStore
+
+        self.cluster = cluster
+        store = self.service.store
+        if store is not None:
+            if store.peer is None:
+                store.peer = PeerStore(router=cluster.replica_peers)
+            else:
+                store.peer.router = cluster.replica_peers
+            cluster.store = store
+        cluster.start()
+        return cluster
+
     def start(self) -> "MappingHTTPServer":
         self._thread = threading.Thread(
             target=self.httpd.serve_forever, name="mapping-http", daemon=True)
@@ -116,9 +173,31 @@ class MappingHTTPServer:
     def serve_forever(self) -> None:
         self.httpd.serve_forever()
 
+    def track_connection(self, sock, alive: bool) -> None:
+        with self._conn_mu:
+            (self._conn_sockets.add if alive
+             else self._conn_sockets.discard)(sock)
+
     def close(self) -> None:
+        if self.cluster is not None:
+            self.cluster.close()
         self.httpd.shutdown()
         self.httpd.server_close()
+        # sever established keep-alive connections too — without this a
+        # "killed" node keeps answering pooled clients through lingering
+        # handler threads, which is not what killed means
+        with self._conn_mu:
+            sockets = list(self._conn_sockets)
+            self._conn_sockets.clear()
+        for sock in sockets:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
         if self._thread is not None:
             self._thread.join(timeout=2.0)
 
@@ -158,18 +237,42 @@ class MappingHTTPServer:
             out["store"] = {"hits": svc.store.hits,
                             "misses": svc.store.misses,
                             "tiers": svc.store.stats()}
+        if self.cluster is not None:
+            out["cluster"] = {**self.cluster.stats(),
+                              "forwarded": self.forwarded,
+                              "forward_errors": self.forward_errors}
         return out
 
 
 def _make_handler(server: MappingHTTPServer):
     class Handler(BaseHTTPRequestHandler):
-        # HTTP/1.0: responses are close-delimited, which is what lets
-        # /v1/grid stream NDJSON without knowing its length up front.
+        # HTTP/1.1: every JSON response carries Content-Length, so pooled
+        # client connections stay open across requests (keep-alive).  The
+        # one exception is /v1/grid, whose NDJSON stream has no knowable
+        # length — it answers `Connection: close` and stays close-delimited.
+        protocol_version = "HTTP/1.1"
+        # reap idle keep-alive connections so abandoned clients don't pin
+        # a handler thread forever (socket timeout -> close_connection)
+        timeout = 60.0
+
+        def setup(self) -> None:
+            super().setup()
+            server.track_connection(self.connection, alive=True)
+
+        def finish(self) -> None:
+            server.track_connection(self.connection, alive=False)
+            super().finish()
 
         def log_message(self, fmt, *args):  # quiet by default
             pass
 
         # -- plumbing ------------------------------------------------------
+        def _request_body_len(self) -> int:
+            try:
+                return int(self.headers.get("Content-Length") or 0)
+            except (TypeError, ValueError):
+                return 0
+
         def _send_json(self, status: int, payload: dict) -> None:
             # default=str matches the store's checksum/publish serialization
             # (core/store.py), so a memory-tier record holding a value the
@@ -179,6 +282,12 @@ def _make_handler(server: MappingHTTPServer):
             self.send_response(status)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            if status >= 400 and self._request_body_len() > 0:
+                # an error may have fired before the request body was read
+                # (oversized body, unknown route): close-delimit so the
+                # unread bytes can't be parsed as the next request on a
+                # kept-alive connection (send_header flips close_connection)
+                self.send_header("Connection", "close")
             self.end_headers()
             self.wfile.write(body)
 
@@ -239,6 +348,11 @@ def _make_handler(server: MappingHTTPServer):
                 self._timed("metrics", self._metrics)
             elif self.path == "/v1/store/stats":
                 self._timed("store_stats", self._store_stats)
+            elif self.path == "/v1/cluster" \
+                    or self.path.startswith("/v1/cluster?"):
+                self._timed("cluster", self._cluster_view)
+            elif self.path == "/v1/replicate/manifest":
+                self._timed("manifest", self._manifest)
             elif self.path.startswith("/v1/artifact/"):
                 self._timed("artifact", self._artifact)
             elif self.path.startswith("/v1/replicate/"):
@@ -265,12 +379,16 @@ def _make_handler(server: MappingHTTPServer):
         def _healthz(self) -> None:
             store = server.service.store
             peers = getattr(getattr(store, "peer", None), "peers", [])
-            self._send_json(200, {
+            payload = {
                 "status": "ok",
                 "store": store is not None,
                 "peers": len(peers),
                 "domains": len(DOMAINS),
-            })
+            }
+            if server.cluster is not None:
+                payload["cluster_nodes_up"] = \
+                    len(server.cluster.live_peers()) + 1
+            self._send_json(200, payload)
 
         def _metrics(self) -> None:
             self._send_json(200, server.metrics())
@@ -278,10 +396,38 @@ def _make_handler(server: MappingHTTPServer):
         def _store_stats(self) -> None:
             store = server.service.store
             if store is None:
-                self._send_json(200, {"store": None})
-                return
-            payload = {"store": store.stats(), "usage": store.usage()}
+                payload = {"store": None}
+            else:
+                payload = {"store": store.stats(), "usage": store.usage()}
+            if server.cluster is not None:
+                payload["cluster"] = {**server.cluster.stats(),
+                                      "forwarded": server.forwarded,
+                                      "forward_errors": server.forward_errors}
             self._send_json(200, payload)
+
+        def _cluster_view(self) -> None:
+            """Membership view exchange: how peers (and ring-aware clients)
+            discover the fleet.  A probing peer announces itself via
+            ``?from=`` and is folded into our view (symmetric discovery —
+            a seed learns its joiners the moment they first probe it).  A
+            standalone node answers 404 — it has no view, and PR-4-era
+            callers never ask."""
+            if server.cluster is None:
+                self._send_json(404, {"error": "node runs standalone "
+                                               "(no --cluster-seed)"})
+                return
+            query = urlsplit(self.path).query
+            announced = parse_qs(query).get("from", [""])[0]
+            if announced:
+                server.cluster.observe(announced)
+            self._send_json(200, server.cluster.view())
+
+        def _manifest(self) -> None:
+            """This node's key manifest (local tiers only): what the
+            anti-entropy loop on a peer diffs against its own holdings."""
+            store = server.service.store
+            keys = store.keys() if store is not None else []
+            self._send_json(200, {"keys": keys, "count": len(keys)})
 
         def _derive(self) -> None:
             body = self._read_body()
@@ -292,8 +438,56 @@ def _make_handler(server: MappingHTTPServer):
             stage = body.get("stage", 100)
             if not isinstance(stage, int) or isinstance(stage, bool):
                 raise ValueError("'stage' must be an integer")
+            if self._maybe_forward(body, domain, model, stage):
+                return
             res = server.service.derive(domain, model, stage)
             self._send_json(200, pipeline.wire_from_result(res))
+
+        def _maybe_forward(self, body: dict, domain: str, model: str,
+                           stage: int) -> bool:
+            """Forward a derive this node does not own to its ring owner
+            (True = response already relayed).  At most one hop: forwarded
+            requests are marked and always served where they land.  A node
+            that already holds the record serves it regardless of ownership
+            — a local hit beats a network hop.  An unreachable owner
+            degrades to local derivation (the fleet may briefly hold an
+            extra copy; correctness never depends on placement)."""
+            cluster = server.cluster
+            if cluster is None or self.headers.get(FORWARDED_HEADER):
+                return False
+            key = server.service.request_key(domain, model, stage)
+            if cluster.owns(key):
+                return False
+            store = server.service.store
+            if store is not None and key in store:
+                return False  # resident locally: serve, don't hop
+            for owner in cluster.replica_peers(key):
+                req = urllib.request.Request(
+                    f"{owner}/v1/derive", data=json.dumps(body).encode(),
+                    method="POST",
+                    headers={"Content-Type": "application/json",
+                             FORWARDED_HEADER: "1"})
+                try:
+                    with urllib.request.urlopen(  # noqa: S310 — fleet URL
+                            req, timeout=server.forward_timeout) as resp:
+                        payload = resp.read()
+                        status = resp.status
+                except urllib.error.HTTPError as e:
+                    # the owner answered: relay its verdict (400/404/503…)
+                    payload = e.read()
+                    status = e.code
+                except (urllib.error.URLError, ConnectionError,
+                        TimeoutError, OSError):
+                    server.forward_errors += 1
+                    continue  # next replica, then local degradation
+                server.forwarded += 1
+                self.send_response(status)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+                return True
+            return False
 
         def _artifact(self) -> None:
             key = self._key_from_path("/v1/artifact/")
@@ -394,6 +588,9 @@ def _make_handler(server: MappingHTTPServer):
                                        names("stages"))
             self.send_response(200)
             self.send_header("Content-Type", "application/x-ndjson")
+            # the stream's length is unknowable up front: close-delimit this
+            # one response (send_header flips close_connection for us)
+            self.send_header("Connection", "close")
             self.end_headers()
             # stream one line per resolved cell; a mid-stream failure becomes
             # a terminal error line (headers are already gone)

@@ -132,6 +132,7 @@ class MappingService:
         self.stats = ServiceStats()
         self._backends: dict[str, LLMBackend] = {}
         self._inflight: dict[str, _InFlight] = {}
+        self._request_keys: dict[tuple[str, str, int], str] = {}
         self._mu = threading.Lock()
 
     @property
@@ -162,6 +163,25 @@ class MappingService:
         return pipeline.prepare_request(
             self._domain(domain), self._backend(model), stage,
             n_validate=self.n_validate, sample_every=self.sample_every)
+
+    def request_key(self, domain: str | Domain, model: str,
+                    stage: int = 100) -> str:
+        """The content address one cell would derive under — what the HTTP
+        layer hashes onto the cluster ring to decide whether this node owns
+        an incoming derive or should forward it to the owner.
+
+        The first call for a model constructs (and registers) its backend,
+        because the address includes ``backend.name`` and
+        ``cache_fingerprint`` — attributes only a live backend carries.
+        That is the same work a local serve would do, and it happens once:
+        repeats hit the memo below without touching the backend."""
+        name = domain.name if isinstance(domain, Domain) else domain
+        key = self._request_keys.get((name, model, stage))
+        if key is None:
+            key = self.request(domain, model, stage).key
+            with self._mu:
+                self._request_keys[(name, model, stage)] = key
+        return key
 
     # -- serving -----------------------------------------------------------
     def derive(
