@@ -32,7 +32,7 @@ def main() -> None:
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
                    help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
-                        "|cluster")
+                        "|cluster|evaluate")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
@@ -58,6 +58,7 @@ def main() -> None:
         "msimplex": msimplex_scaling.run,
         "serving": serving.run,
         "cluster": serving.cluster_suite,
+        "evaluate": serving.evaluate_suite,
     }
     report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
@@ -83,7 +84,8 @@ def main() -> None:
             "failed": any(f[0] == name for f in failures),
         }
     if serving.LAST_METRICS and ("serving" in report["suites"]
-                                 or "cluster" in report["suites"]):
+                                 or "cluster" in report["suites"]
+                                 or "evaluate" in report["suites"]):
         report["serving"] = serving.LAST_METRICS
         # the serving suite runs against its own private store, invisible to
         # default_cache() — take its hit/miss deltas from the server's own

@@ -26,6 +26,19 @@ fleet actually pays for:
     hashing locally and hitting the owner, against the server-side
     forwarding hop a ring-naive client pays.
 
+The evaluate sub-suite (``--only evaluate``) measures the evaluation
+plane added in PR 6:
+
+  * cold vs warm query — first evaluation of a cell pays the pallas
+    trace + XLA compile; repeats hit the compiled-executable cache, so
+    the number is pure dispatch + transfer (acceptance: warm p50 at
+    least 10x below cold);
+  * batched heterogeneous request vs a sequential per-query loop over
+    HTTP — grouping + one round-trip must beat N round-trips;
+  * roofline sanity — the measured per-block cost against the TPU v5e
+    projection from ``core/energy.py`` (an idealized lower bound; the
+    ratio is recorded, not optimized).
+
 Run metrics (cache hits, coalescing, p50/p95 from the server's own
 /metrics, per-tier store counters) land in ``LAST_METRICS`` so ``run.py
 --json`` can emit them.
@@ -297,6 +310,155 @@ def cluster_suite(n_hot: int = 60) -> dict:
     return cluster
 
 
+def evaluate_suite(n_warm: int = 30, n_loops: int = 3) -> dict:
+    """Evaluation-plane numbers: cold trace vs warm compiled-cache hit,
+    batched heterogeneous /v1/evaluate vs a sequential per-query loop,
+    and the measured per-block cost against the energy-model roofline."""
+    header("serving: evaluate (compile cache, batched hot path)")
+    from repro.core import compile_cache as cc
+    from repro.core.domains import DOMAINS
+    from repro.core.energy import tpu_block_projection
+    from repro.serving.evaluate import EvaluationService
+
+    # -- cold trace vs warm hit (private cache, no HTTP in the way) --------
+    local = EvaluationService(compile_cache=cc.CompileCache(max_entries=64))
+    probes = [
+        {"domain": "tri2d", "n_points": 4096},
+        {"domain": "gasket2d", "n_points": 2048},
+        {"domain": "msimplex3", "n_points": 1024},
+        {"domain": "tri2d", "tier": "membership", "extent": [48, 48]},
+    ]
+    cold_us = []
+    for q in probes:
+        t0 = time.perf_counter()
+        res = local.evaluate(q)
+        cold_us.append((time.perf_counter() - t0) * 1e6)
+        assert res["executable"] == "miss"
+    warm_us = []
+    for _ in range(n_warm):
+        for q in probes:
+            t0 = time.perf_counter()
+            res = local.evaluate(q)
+            warm_us.append((time.perf_counter() - t0) * 1e6)
+            assert res["executable"] == "hit"
+    warm_us.sort()
+    cold_p50 = statistics.median(cold_us)
+    warm_p50 = warm_us[len(warm_us) // 2]
+    warm_p95 = warm_us[int(len(warm_us) * 0.95)]
+    warm_speedup = cold_p50 / warm_p50
+    emit("evaluate_cold_p50", cold_p50, "trace")
+    emit("evaluate_warm_p50", warm_p50, "cached")
+    emit("evaluate_warm_p95", warm_p95, "cached")
+    assert warm_speedup >= 10, (
+        f"warm path only {warm_speedup:.1f}x below cold (need >= 10x)")
+
+    # -- batched heterogeneous request vs sequential loop, over HTTP -------
+    cache = ArtifactCache(tempfile.mkdtemp(prefix="bench_evaluate_"))
+    factory = batching_factory(MockLLMBackend, max_batch=8, max_wait=0.005)
+    service = MappingService(cache=cache, backend_factory=factory,
+                             n_validate=20_000, sample_every=10)
+    hetero = [
+        {"domain": "tri2d", "n_points": 512},
+        {"domain": "tri2d", "n_points": 1024},
+        {"domain": "tri2d", "n_points": 2048},
+        {"domain": "gasket2d", "n_points": 512},
+        {"domain": "gasket2d", "n_points": 1024},
+        {"domain": "gasket2d", "n_points": 2048},
+        {"domain": "msimplex3", "n_points": 512},
+        {"domain": "msimplex3", "n_points": 1024},
+        {"domain": "tri2d", "tier": "membership", "extent": [32, 32]},
+        {"domain": "tri2d", "tier": "membership", "extent": [32, 32]},
+        {"domain": "gasket2d", "tier": "membership", "extent": [27, 27]},
+        {"domain": "msimplex3", "tier": "membership", "extent": [9, 9, 9]},
+    ]
+
+    def seq_pass(client) -> float:
+        t0 = time.perf_counter()
+        for q in hetero:
+            if q.get("tier") == "membership":
+                client.evaluate(q["domain"], tier="membership",
+                                extent=q["extent"])
+            else:
+                client.evaluate(q["domain"], n_points=q["n_points"])
+        return time.perf_counter() - t0
+
+    with MappingHTTPServer(service) as server:
+        client = RemoteMappingService(server.url)
+        # warm both code paths: the batch uses group-padded executables,
+        # the loop uses per-query ones — distinct cache entries
+        batch_res = client.evaluate_batch(hetero)
+        seq_pass(client)
+        seq_s = min(seq_pass(client) for _ in range(n_loops))
+        t_batch = []
+        for _ in range(n_loops):
+            t0 = time.perf_counter()
+            batch_res = client.evaluate_batch(hetero)
+            t_batch.append(time.perf_counter() - t0)
+        batch_s = min(t_batch)
+        groups = len({r["group"] for r in batch_res}) \
+            if all("group" in r for r in batch_res) else 0
+        metrics = client.metrics()
+    batch_speedup = seq_s / batch_s
+    emit("evaluate_seq_loop", seq_s / len(hetero) * 1e6, "n*http")
+    emit("evaluate_batched", batch_s / len(hetero) * 1e6, "1*http")
+    assert batch_speedup > 1, (
+        f"batched request slower than sequential loop ({batch_speedup:.2f}x)")
+
+    # -- roofline sanity: measured per-block cost vs TPU v5e projection ----
+    n_points, block_n = 65_536, 1024
+    roof_q = {"domain": "tri2d", "n_points": n_points, "block_n": block_n}
+    local.evaluate(roof_q)  # compile
+    t0 = time.perf_counter()
+    roof_res = local.evaluate(roof_q)
+    roof_s = time.perf_counter() - t0
+    assert roof_res["executable"] == "hit"
+    n_blocks = roof_res["padded"] // block_n
+    dim = DOMAINS["tri2d"].dim
+    # per-point work model: ~12 integer ops per digit of the address
+    # computation, (dim coords + λ) words of traffic
+    proj = tpu_block_projection(
+        flops_per_block=block_n * roof_res["ndigits"] * 12,
+        bytes_per_block=block_n * (dim + 1) * 4,
+        n_blocks=n_blocks)
+    measured_block_us = roof_s / n_blocks * 1e6
+    roofline_block_us = proj["time_s"] / n_blocks * 1e6
+    emit("evaluate_block_measured", measured_block_us, "warm")
+    emit("evaluate_block_roofline", roofline_block_us, proj["bound"])
+    # the projection is an idealized accelerator lower bound — a measured
+    # interpret-mode CPU number below it would mean the model is broken
+    assert measured_block_us >= roofline_block_us
+
+    ev = {
+        "cold_p50_us": cold_p50,
+        "warm_p50_us": warm_p50,
+        "warm_p95_us": warm_p95,
+        "warm_speedup": warm_speedup,
+        "seq_loop_s": seq_s,
+        "batch_s": batch_s,
+        "batch_speedup": batch_speedup,
+        "batch_queries": len(hetero),
+        "batch_groups": groups,
+        "roofline": {
+            "n_blocks": n_blocks,
+            "measured_block_us": measured_block_us,
+            "roofline_block_us": roofline_block_us,
+            "bound": proj["bound"],
+            "ratio": measured_block_us / roofline_block_us,
+        },
+        "local_stats": local.stats_dict(),
+        "server_metrics": {k: metrics.get(k)
+                           for k in ("evaluate", "compile_cache", "http")},
+        "client_stats": client.stats.as_dict(),
+    }
+    LAST_METRICS["evaluate"] = ev
+    print(f"(cold p50 {cold_p50 / 1e3:.1f}ms vs warm p50 "
+          f"{warm_p50:.0f}us = {warm_speedup:.0f}x; batch of {len(hetero)} "
+          f"in {groups} groups {batch_speedup:.1f}x faster than the loop; "
+          f"measured/roofline per-block {ev['roofline']['ratio']:.0f}x)")
+    return ev
+
+
 if __name__ == "__main__":
     run()
     cluster_suite()
+    evaluate_suite()

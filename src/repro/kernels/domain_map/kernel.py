@@ -50,9 +50,11 @@ def _geometry_tier(spec, tier_name: str):
     return domain_name, REGISTRY.tier(domain_name, None, tier_name)
 
 
-def _map_kernel(o_ref, *, coords_fn, block_n: int, ndigits: int):
+def _map_kernel(o_ref, *, coords_fn, block_n: int, ndigits: int,
+                lam_offset: int = 0):
     pid = pl.program_id(0)
-    lam = pid * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    lam = (lam_offset + pid * block_n
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1))
     axes = coords_fn(lam, ndigits)
     out = jnp.concatenate(
         axes + [jnp.zeros_like(lam)] * (8 - len(axes)), axis=0
@@ -74,12 +76,18 @@ def _membership_kernel(o_ref, *, membership_fn, block_n: int,
 
 
 def build_map_call(spec, n_points: int, block_n: int = 1024,
-                   ndigits: int = 13, interpret: bool = False):
+                   ndigits: int = 13, interpret: bool = False,
+                   lam_offset: int = 0):
+    """Zero-arg thunk evaluating coordinates for the λ-range
+    ``[lam_offset, lam_offset + n_points)`` — offset 0 is the classic
+    first-N launch; nonzero offsets serve range queries and per-device
+    shards of a large sweep."""
     assert n_points % block_n == 0, "pad N to a block multiple"
     _, coords_fn = _geometry_tier(spec, "pallas")
     grid = (n_points // block_n,)
     kernel = functools.partial(
-        _map_kernel, coords_fn=coords_fn, block_n=block_n, ndigits=ndigits
+        _map_kernel, coords_fn=coords_fn, block_n=block_n, ndigits=ndigits,
+        lam_offset=lam_offset,
     )
     return pl.pallas_call(
         kernel,

@@ -3,11 +3,20 @@
 Every entry point takes a *map spec* — a domain name, a ``Domain``, a
 registry ``MapEntry`` or a validated ``MappingArtifact`` — and resolves the
 geometry through the MapRegistry.
+
+Execution routes through :mod:`repro.core.compile_cache`: the Pallas call
+is traced and compiled once per ``(spec identity, shape, block_n, ndigits,
+interpret, device)`` and every repeat invocation reuses the compiled
+executable — the hot path is one cache hit plus the device dispatch, no
+re-trace.  Pass ``compile_cache=None`` to bypass (the pre-cache behavior,
+one trace per call); pass a :class:`~repro.core.compile_cache.CompileCache`
+to use a private cache instead of the process default.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core import compile_cache as cc
 from repro.core.artifact import resolve_domain
 from repro.core.domains import get_domain
 from repro.kernels.domain_map.kernel import build_map_call, build_membership_call
@@ -17,27 +26,87 @@ def _pad_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def map_coordinates(spec, n_points: int, block_n: int = 1024,
-                    interpret: bool = False) -> np.ndarray:
-    """First n_points coordinates via the mapped-grid Pallas kernel, (N, dim)."""
+def map_plan(spec, n_points: int, block_n: int,
+             start: int = 0) -> tuple[object, int, int]:
+    """(domain, padded N, ndigits) for a mapped-kernel launch — shared by
+    the local wrappers here and the batching EvaluationService, so both
+    resolve identical executables for identical queries."""
     d = get_domain(resolve_domain(spec))
     padded = _pad_to(n_points, block_n)
-    ndigits = max(d.level_for_points(padded), 1) if d.kind == "fractal" else 13
-    call = build_map_call(spec, padded, block_n, ndigits, interpret)
+    ndigits = max(d.level_for_points(start + padded), 1) \
+        if d.kind == "fractal" else 13
+    return d, padded, ndigits
+
+
+def membership_plan(spec, extent: tuple[int, ...],
+                    block_n: int) -> tuple[object, int, int]:
+    """(domain, padded box total, ndigits) for a BB-membership launch."""
+    d = get_domain(resolve_domain(spec))
+    total = int(np.prod(extent))
+    padded = _pad_to(total, block_n)
+    # membership of the box needs digits covering the box extent
+    ndigits = (max(d.level_for_points(total), 1) + 1) \
+        if d.kind == "fractal" else 13
+    return d, padded, ndigits
+
+
+def mapped_executable(spec, padded: int, block_n: int, ndigits: int,
+                      interpret: bool, start: int = 0,
+                      compile_cache=cc.USE_DEFAULT):
+    """The (cached) compiled executable for one mapped-kernel launch."""
+    cache = cc.resolve(compile_cache)
+
+    def build():
+        return build_map_call(spec, padded, block_n, ndigits, interpret,
+                              lam_offset=start)
+
+    if cache is None:
+        return build()
+    key = cc.ExecKey(cc.spec_fingerprint(spec), "map",
+                     (start, padded), block_n, ndigits,
+                     interpret=interpret)
+    return cache.get(key, build)
+
+
+def membership_executable(spec, extent: tuple[int, ...], padded: int,
+                          block_n: int, ndigits: int, interpret: bool,
+                          compile_cache=cc.USE_DEFAULT):
+    """The (cached) compiled executable for one BB-membership launch."""
+    cache = cc.resolve(compile_cache)
+
+    def build():
+        return build_membership_call(spec, extent, block_n, ndigits,
+                                     interpret, padded_total=padded)
+
+    if cache is None:
+        return build()
+    key = cc.ExecKey(cc.spec_fingerprint(spec), "membership",
+                     tuple(extent) + (padded,), block_n, ndigits,
+                     interpret=interpret)
+    return cache.get(key, build)
+
+
+def map_coordinates(spec, n_points: int, block_n: int = 1024,
+                    interpret: bool = False, start: int = 0,
+                    compile_cache=cc.USE_DEFAULT) -> np.ndarray:
+    """Coordinates for λ in [start, start + n_points) via the mapped-grid
+    Pallas kernel, (N, dim).  ``start=0`` is the classic first-N launch."""
+    d, padded, ndigits = map_plan(spec, n_points, block_n, start)
+    call = mapped_executable(spec, padded, block_n, ndigits, interpret,
+                             start=start, compile_cache=compile_cache)
     out = np.asarray(call())            # (8, padded)
     return out[: d.dim, :n_points].T    # (N, dim)
 
 
 def bb_membership(spec, extent: tuple[int, ...],
-                  block_n: int = 1024, interpret: bool = False) -> np.ndarray:
+                  block_n: int = 1024, interpret: bool = False,
+                  compile_cache=cc.USE_DEFAULT) -> np.ndarray:
     """Row-major membership mask over the bounding box via the BB kernel."""
-    d = get_domain(resolve_domain(spec))
+    d, padded, ndigits = membership_plan(spec, extent, block_n)
     total = int(np.prod(extent))
-    padded = _pad_to(total, block_n)
-    # membership of the box needs digits covering the box extent
-    ndigits = (max(d.level_for_points(total), 1) + 1) if d.kind == "fractal" else 13
-    call = build_membership_call(spec, extent, block_n, ndigits, interpret,
-                                 padded_total=padded)
+    call = membership_executable(spec, tuple(extent), padded, block_n,
+                                 ndigits, interpret,
+                                 compile_cache=compile_cache)
     out = np.asarray(call())[0]
     return out[:total]
 

@@ -109,7 +109,17 @@ def _cluster_from_args(args, server):
 def serve_maps(args) -> None:
     """Boot the full stack: backend -> batching queue -> MappingService ->
     HTTP frontend (-> cluster membership), then serve until interrupted."""
+    from repro.core import compile_cache
     from repro.serving import MappingHTTPServer, MappingService, batching_factory
+
+    # evaluation-plane knobs (flags win; REPRO_COMPILE_CACHE_* env fallback
+    # is read inside configure_default/default_compile_cache)
+    if args.compile_cache_entries is not None \
+            or args.compile_cache_dir is not None:
+        compile_cache.configure_default(
+            max_entries=args.compile_cache_entries,
+            persist_dir=args.compile_cache_dir)
+    cc = compile_cache.default_compile_cache()
 
     factory = batching_factory(
         _backend_factory(args), max_batch=args.max_batch,
@@ -131,13 +141,19 @@ def serve_maps(args) -> None:
         desc = f"{disk} memory={mem} entries, peers={peers or 'none'}"
     print(f"mapping service on {server.url}  "
           f"(backend={args.backend}, store={desc})")
+    if cc is None:
+        print("compile cache: off")
+    else:
+        print(f"compile cache: {cc.max_entries} entries, "
+              f"persist={cc.persist_dir or 'off'}")
     if cluster is not None:
         print(f"cluster: self={cluster.self_url} replicas="
               f"{cluster.replicas} vnodes={cluster.vnodes} "
               f"heartbeat={cluster.heartbeat_interval}s "
               f"sync={cluster.sync_interval}s "
               f"peers_up={cluster.live_peers() or 'none'}")
-    print("endpoints: POST /v1/derive  GET|DELETE /v1/artifact/<key>  "
+    print("endpoints: POST /v1/derive  POST /v1/evaluate  "
+          "GET|DELETE /v1/artifact/<key>  "
           "POST /v1/grid  GET /v1/store/stats  GET /v1/cluster  "
           "GET /v1/replicate/manifest  GET|POST /v1/replicate/<key>  "
           "GET /healthz  GET /metrics")
@@ -225,6 +241,16 @@ def main() -> None:
     p.add_argument("--peers", default=None, metavar="URL[,URL...]",
                    help="static sibling servers to replicate with (PR 4 "
                         "broadcast mesh; superseded by --cluster-seed)")
+    # evaluation plane (see core/compile_cache.py + serving/evaluate.py)
+    p.add_argument("--compile-cache-entries", type=int, default=None,
+                   help="compiled-executable LRU capacity for /v1/evaluate "
+                        "(0 disables; default 128) "
+                        "[REPRO_COMPILE_CACHE_ENTRIES]")
+    p.add_argument("--compile-cache-dir", default=None, metavar="DIR",
+                   help="persist serialized executables here so a restarted "
+                        "server skips re-tracing (best effort — falls back "
+                        "to in-memory when the jaxlib can't round-trip) "
+                        "[REPRO_COMPILE_CACHE_DIR]")
     # consistent-hash sharded fleet (see serving/cluster.py); every flag
     # falls back to its REPRO_CLUSTER_* env var
     p.add_argument("--cluster-seed", default=None, metavar="URL[,URL...]",

@@ -1,9 +1,14 @@
 """Serving layer: the LM prefill/decode engine (``engine``), the
 concurrency-safe mapping-artifact service (``map_service``), and its
 networked form — HTTP frontend (``http``), keep-alive remote client
-(``client``), per-model request batching/admission (``batching``), and the
+(``client``), per-model request batching/admission (``batching``), the
 consistent-hash sharded fleet layer (``cluster``: ring placement,
-membership heartbeats, anti-entropy repair)."""
+membership heartbeats, anti-entropy repair), and the batched map
+*evaluation* hot path (``evaluate``: compiled-executable groups behind
+``POST /v1/evaluate``).
+
+``EvaluationService`` is imported lazily (it pulls in jax + the kernels) —
+``from repro.serving.evaluate import EvaluationService``."""
 from repro.serving.batching import (  # noqa: F401
     AdmissionError, BatchingBackend, BatchStats, batching_factory,
 )

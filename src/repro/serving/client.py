@@ -171,6 +171,7 @@ class RemoteMappingService:
         self._ring = None              # HashRing once the view is fetched
         self._ring_checked = False     # 404 = standalone server: stay plain
         self._cell_keys: dict[tuple[str, str, int], str] = {}
+        self._local_evaluator = None   # lazy EvaluationService fallback
 
     # -- connection pool ---------------------------------------------------
     def _conns(self) -> dict:
@@ -376,6 +377,22 @@ class RemoteMappingService:
                 fb, MappingService) else fb  # type: ignore[assignment]
         return self._fallback_service
 
+    def _local_eval(self):
+        """Local EvaluationService for evaluate fallback — enabled exactly
+        when a derive ``fallback`` was configured (same degradation policy:
+        the client machine computes rather than erroring out).  Artifact-key
+        queries resolve against the fallback service's store."""
+        if self._fallback is None:
+            return None
+        if self._local_evaluator is None:
+            from repro.serving.evaluate import EvaluationService
+
+            local = self._local()
+            self._local_evaluator = EvaluationService(
+                artifact_resolver=local.artifact_for_key
+                if local is not None else None)
+        return self._local_evaluator
+
     # -- key validation ----------------------------------------------------
     def _require_key(self, key: str) -> None:
         """Fail fast on a malformed content address — the server would
@@ -414,6 +431,103 @@ class RemoteMappingService:
     def artifact(self, domain: str | Domain, model: str,
                  stage: int = 100) -> MappingArtifact | None:
         return self.derive(domain, model, stage).artifact
+
+    # -- evaluation (mapped coordinates over the wire) ---------------------
+    def evaluate(self, domain: str | Domain | None = None, *,
+                 key: str | None = None, tier: str = "map",
+                 n_points: int | None = None, start: int = 0,
+                 extent: Sequence[int] | None = None,
+                 block_n: int | None = None,
+                 interpret: bool | None = None) -> dict:
+        """POST /v1/evaluate (single query): mapped coordinates for a
+        λ-range (map tier) or a membership mask over a box (membership
+        tier), computed by the server's compiled-executable hot path.
+        Returns the result dict with ``coords``/``mask`` as numpy arrays.
+
+        Transport policy is identical to :meth:`derive`: transport errors
+        and 503 retry with backoff; with a ``fallback`` configured, a dead
+        server degrades to local evaluation (same kernels, same bytes)."""
+        query: dict = {"tier": tier}
+        if key is not None:
+            self._require_key(key)
+            query["key"] = key
+        elif domain is not None:
+            query["domain"] = domain.name if isinstance(domain, Domain) \
+                else domain
+        else:
+            raise ValueError("evaluate() needs 'domain' or 'key'")
+        if n_points is not None:
+            query["n_points"] = n_points
+        if start:
+            query["start"] = start
+        if extent is not None:
+            query["extent"] = list(extent)
+        if block_n is not None:
+            query["block_n"] = block_n
+        if interpret is not None:
+            query["interpret"] = interpret
+        return self.evaluate_batch([query])[0]
+
+    def evaluate_batch(self, queries: Sequence[dict]) -> list[dict]:
+        """POST /v1/evaluate with a heterogeneous query batch: one HTTP
+        round-trip, server-side executable grouping, results in query
+        order (``coords``/``mask`` hydrated to numpy arrays)."""
+        from repro.serving import evaluate as ev
+
+        try:
+            payload = self._call_json("/v1/evaluate",
+                                      {"queries": list(queries)})
+        except RemoteServiceError as e:
+            local = self._local_eval()
+            if local is None or not _falls_back(e):
+                raise
+            self.stats.fallbacks += 1
+            results, _ = local.evaluate_batch(list(queries))
+            return results
+        return [ev.hydrate_result(r) for r in payload.get("results", [])]
+
+    def evaluate_sweep(self, domains: Sequence[str], sizes: Sequence[int],
+                       tier: str = "map", block_n: int | None = None,
+                       interpret: bool | None = None) -> Iterator[dict]:
+        """Streamed evaluation sweep over (domain × n_points): one hydrated
+        result per NDJSON line, as the server resolves cells (the /v1/grid
+        framing, applied to the evaluation plane)."""
+        from repro.serving import evaluate as ev
+
+        sweep: dict = {"domains": list(domains), "sizes": list(sizes),
+                       "tier": tier}
+        if block_n is not None:
+            sweep["block_n"] = block_n
+        if interpret is not None:
+            sweep["interpret"] = interpret
+        try:
+            resp = self._attempts("/v1/evaluate", {"sweep": sweep})
+        except RemoteServiceError as e:
+            local = self._local_eval()
+            if local is None or not _falls_back(e):
+                raise
+            self.stats.fallbacks += 1
+            yield from local.sweep(domains, sizes, tier=tier,
+                                   block_n=block_n, interpret=interpret)
+            return
+        with resp:
+            self.stats.remote_requests += 1
+            while True:
+                try:
+                    raw = resp.readline()
+                except _TRANSPORT_ERRORS as e:
+                    raise RemoteServiceError(
+                        f"/v1/evaluate stream broke mid-sweep: {e}") from e
+                if not raw:
+                    break
+                line = raw.strip()
+                if not line:
+                    continue
+                payload = json.loads(line)
+                if "error" in payload and "tier" not in payload:
+                    raise RemoteServiceError(
+                        f"/v1/evaluate failed mid-stream: {payload['error']}")
+                yield ev.hydrate_result(payload)
 
     def fetch_artifact(self, key: str) -> dict:
         """GET /v1/artifact/<key>: the raw {record, artifact} payload for a

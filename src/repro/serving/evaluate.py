@@ -1,0 +1,424 @@
+"""EvaluationService — the batched map-evaluation hot path.
+
+Derivation (PRs 1–5) produces mapping *artifacts*; this service runs them.
+It accepts batches of heterogeneous queries — each a ``(domain | artifact
+key, tier, λ-range / box extent)`` — and executes them the way deployed
+kernels want to be executed:
+
+  * **executable grouping** — queries that resolve to the same compiled
+    executable family (same spec identity, tier, block size, interpret
+    mode) are merged: the group runs ONE kernel launch padded to the
+    widest member, and every member slices its answer out of the shared
+    device buffer.  A batch of 20 tri2d prefix queries costs one dispatch.
+  * **async dispatch across groups** — all group executables are
+    dispatched before any host transfer, so heterogeneous groups overlap
+    on device; there are zero host round-trips between same-shape queries
+    and exactly one device->host transfer per group.
+  * **compiled-executable cache** — resolution goes through
+    :mod:`repro.core.compile_cache`, so a warm query pays a dict hit + a
+    dispatch, never a re-trace (see ``kernels/domain_map/ops.py``).
+  * **multi-device sweeps** — with more than one visible device,
+    ``sweep`` shards the λ-range of each grid cell across devices with
+    ``shard_map`` over the registry's traceable ``jnp`` tier.
+
+Query schema (one dict per query; the wire form of ``POST /v1/evaluate``):
+
+    {"domain": "tri2d",            # or "key": "<64-hex content address>"
+     "tier": "map",                # "map" (default) | "membership"
+     "n_points": 4096,             # map tier: λ-range length
+     "start": 0,                   # map tier: λ-range offset (default 0)
+     "extent": [64, 64],           # membership tier: bounding-box extent
+     "block_n": 1024,              # optional; kernel block size
+     "interpret": null}            # optional; default: auto per backend
+
+``key`` queries resolve a *derived* artifact by content address through the
+artifact store (the paper's Phase-4 integration: only a deployable —
+100%-ordered — artifact may drive the mapped kernel).  ``domain`` queries
+run the registry's ground-truth geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Iterable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core import compile_cache as cc
+from repro.core.domains import DOMAINS, Domain
+from repro.core.registry import REGISTRY
+from repro.core.store import valid_key
+from repro.kernels.domain_map import ops
+
+#: hard ceiling on one query's output size — a JSON-serialized answer past
+#: this is a transport problem, not an evaluation problem (use sweeps).
+MAX_POINTS = 1 << 21
+
+TIERS = ("map", "membership")
+
+
+def auto_interpret() -> bool:
+    """Pallas lowers natively on TPU/GPU; anywhere else (CPU CI, tests)
+    the kernels run in interpret mode."""
+    import jax
+
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+@dataclasses.dataclass
+class EvalStats:
+    """Cumulative counters for the /metrics surface."""
+
+    queries: int = 0          # individual queries admitted
+    batches: int = 0          # evaluate_batch calls
+    groups: int = 0           # executable groups dispatched
+    shared: int = 0           # queries that rode another query's dispatch
+    points: int = 0           # points asked for (pre-padding)
+    padded_points: int = 0    # points computed (post-padding/merging)
+    sweep_cells: int = 0      # cells streamed by sweep()
+    sharded_dispatches: int = 0  # multi-device shard_map dispatches
+    errors: int = 0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["padding_overhead"] = (
+            (self.padded_points - self.points) / self.padded_points
+            if self.padded_points else 0.0)
+        return d
+
+
+@dataclasses.dataclass
+class _Plan:
+    """One admitted query, fully resolved for grouping."""
+
+    index: int
+    spec: object              # str domain name | MappingArtifact
+    domain: Domain
+    tier: str
+    n_points: int             # valid points requested (box total for BB)
+    start: int
+    extent: tuple[int, ...] | None
+    block_n: int
+    interpret: bool
+    padded: int
+    ndigits: int
+    fingerprint: str
+
+    @property
+    def group_key(self) -> tuple:
+        if self.tier == "membership":
+            # a box kernel's unravel strides bake the extent into the
+            # lowering — only identical boxes share an executable
+            return (self.fingerprint, "membership", self.extent,
+                    self.block_n, self.interpret)
+        # map-tier prefix queries share freely: the widest member's output
+        # contains every narrower member's answer
+        return (self.fingerprint, "map", self.start, self.block_n,
+                self.interpret)
+
+
+class EvaluationService:
+    """Batched evaluation of thread maps over compiled executables.
+
+    ``artifact_resolver`` (optional) maps a 64-hex content address to a
+    :class:`~repro.core.artifact.MappingArtifact` (or None) — wire queries
+    carrying ``key`` instead of ``domain`` resolve through it; typically
+    ``MappingService.artifact_for_key``."""
+
+    def __init__(self, artifact_resolver: Callable | None = None,
+                 compile_cache=cc.USE_DEFAULT,
+                 max_points: int = MAX_POINTS,
+                 default_block_n: int = 1024):
+        self.artifact_resolver = artifact_resolver
+        self.cache = cc.resolve(compile_cache)
+        self.max_points = max_points
+        self.default_block_n = default_block_n
+        self.stats = EvalStats()
+        self._mu = threading.Lock()
+
+    # -- query admission ---------------------------------------------------
+    def _resolve_spec(self, q: dict):
+        key = q.get("key")
+        if key is not None:
+            if not isinstance(key, str) or not valid_key(key):
+                raise ValueError(
+                    "'key' must be a 64-hex artifact content address")
+            if self.artifact_resolver is None:
+                raise ValueError(
+                    "this evaluator cannot resolve artifact keys "
+                    "(no store attached)")
+            art = self.artifact_resolver(key)
+            if art is None:
+                raise KeyError(key)
+            if not art.deployable:
+                raise ValueError(
+                    f"artifact {key[:12]}… is not deployable: "
+                    f"ordered={art.report.ordered_pct:.2f}% "
+                    f"(error={art.report.error!r})")
+            return art, art.domainobj
+        domain = q.get("domain")
+        if not isinstance(domain, str):
+            raise ValueError("query must carry string 'domain' or 'key'")
+        if domain not in DOMAINS:
+            raise KeyError(domain)
+        return domain, DOMAINS[domain]
+
+    def _plan(self, index: int, q: dict) -> _Plan:
+        if not isinstance(q, dict):
+            raise ValueError("each query must be a JSON object")
+        spec, dom = self._resolve_spec(q)
+        tier = q.get("tier", "map")
+        if tier not in TIERS:
+            raise ValueError(f"'tier' must be one of {TIERS}, got {tier!r}")
+        block_n = q.get("block_n", self.default_block_n)
+        if not isinstance(block_n, int) or isinstance(block_n, bool) \
+                or block_n <= 0:
+            raise ValueError("'block_n' must be a positive integer")
+        interpret = q.get("interpret")
+        if interpret is None:
+            interpret = auto_interpret()
+        if not isinstance(interpret, bool):
+            raise ValueError("'interpret' must be a boolean")
+        if tier == "membership":
+            extent = q.get("extent")
+            if (not isinstance(extent, (list, tuple)) or not extent
+                    or not all(isinstance(e, int) and not isinstance(e, bool)
+                               and e > 0 for e in extent)):
+                raise ValueError("membership queries need 'extent': a "
+                                 "non-empty list of positive integers")
+            if len(extent) != dom.dim:
+                raise ValueError(
+                    f"extent has {len(extent)} axes; domain "
+                    f"{dom.name!r} is {dom.dim}-dimensional")
+            total = int(np.prod(extent))
+            if total > self.max_points:
+                raise ValueError(
+                    f"extent covers {total} cells > max {self.max_points}")
+            _, padded, ndigits = ops.membership_plan(
+                spec, tuple(extent), block_n)
+            return _Plan(index, spec, dom, tier, total, 0, tuple(extent),
+                         block_n, interpret, padded, ndigits,
+                         cc.spec_fingerprint(spec))
+        n_points = q.get("n_points")
+        if not isinstance(n_points, int) or isinstance(n_points, bool) \
+                or n_points <= 0:
+            raise ValueError("map queries need 'n_points': a positive "
+                             "integer")
+        if n_points > self.max_points:
+            raise ValueError(
+                f"n_points {n_points} > max {self.max_points}")
+        start = q.get("start", 0)
+        if not isinstance(start, int) or isinstance(start, bool) \
+                or start < 0:
+            raise ValueError("'start' must be a non-negative integer")
+        _, padded, ndigits = ops.map_plan(spec, n_points, block_n, start)
+        return _Plan(index, spec, dom, tier, n_points, start, None,
+                     block_n, interpret, padded, ndigits,
+                     cc.spec_fingerprint(spec))
+
+    # -- execution ---------------------------------------------------------
+    def _group_executable(self, plans: list[_Plan]):
+        """One compiled executable covering every plan in the group (padded
+        to the widest member, digits to the deepest member — both exact:
+        extra λ range is sliced away, extra digit layers contribute zero)."""
+        lead = plans[0]
+        padded = max(p.padded for p in plans)
+        ndigits = max(p.ndigits for p in plans)
+        before = self.cache.stats.misses + self.cache.stats.disk_hits \
+            if self.cache is not None else 0
+        if lead.tier == "membership":
+            call = ops.membership_executable(
+                lead.spec, lead.extent, padded, lead.block_n, ndigits,
+                lead.interpret, compile_cache=self.cache)
+        else:
+            call = ops.mapped_executable(
+                lead.spec, padded, lead.block_n, ndigits, lead.interpret,
+                start=lead.start, compile_cache=self.cache)
+        compiled_fresh = self.cache is not None and (
+            self.cache.stats.misses + self.cache.stats.disk_hits > before)
+        return call, padded, ndigits, compiled_fresh
+
+    def evaluate_batch(self, queries: Sequence[dict]
+                       ) -> tuple[list[dict], dict]:
+        """Evaluate a heterogeneous batch: ``(results, batch_meta)``.
+
+        Results arrive in query order; each carries its coordinates/mask as
+        a numpy array plus grouping/caching provenance.  A malformed query
+        fails the whole batch (``ValueError``); an unknown domain or
+        artifact key raises ``KeyError`` — both before any dispatch."""
+        if not queries:
+            raise ValueError("empty query batch")
+        try:
+            plans = [self._plan(i, q) for i, q in enumerate(queries)]
+        except Exception:
+            with self._mu:
+                self.stats.errors += 1
+            raise
+        groups: dict[tuple, list[_Plan]] = {}
+        for p in plans:
+            groups.setdefault(p.group_key, []).append(p)
+
+        # phase 1 — dispatch every group (device work overlaps; no host
+        # transfer yet)
+        launched = []
+        for members in groups.values():
+            call, padded, ndigits, fresh = self._group_executable(members)
+            launched.append((members, call(), padded, ndigits, fresh))
+
+        # phase 2 — one transfer per group, then pure-host slicing
+        results: list[dict] = [None] * len(plans)  # type: ignore[list-item]
+        for gid, (members, out_dev, padded, ndigits, fresh) in \
+                enumerate(launched):
+            out = np.asarray(out_dev)
+            for p in members:
+                if p.tier == "membership":
+                    data = {"mask": out[0, :p.n_points]}
+                else:
+                    data = {"coords": out[:p.domain.dim, :p.n_points].T}
+                results[p.index] = {
+                    "index": p.index,
+                    "domain": p.domain.name,
+                    "tier": p.tier,
+                    "n_points": p.n_points,
+                    "start": p.start,
+                    "extent": list(p.extent) if p.extent else None,
+                    "block_n": p.block_n,
+                    "ndigits": ndigits,
+                    "padded": padded,
+                    "interpret": p.interpret,
+                    "group": gid,
+                    "group_size": len(members),
+                    "executable": "miss" if fresh else "hit",
+                    **data,
+                }
+        with self._mu:
+            self.stats.queries += len(plans)
+            self.stats.batches += 1
+            self.stats.groups += len(groups)
+            self.stats.shared += len(plans) - len(groups)
+            self.stats.points += sum(p.n_points for p in plans)
+            self.stats.padded_points += sum(
+                lp for (_, _, lp, _, _) in launched)
+        meta = {
+            "queries": len(plans),
+            "groups": len(groups),
+            "dispatches": len(groups),
+        }
+        return results, meta
+
+    def evaluate(self, query: dict) -> dict:
+        """Single-query form of :meth:`evaluate_batch`."""
+        results, _ = self.evaluate_batch([query])
+        return results[0]
+
+    # -- sweeps ------------------------------------------------------------
+    def sweep(self, domains: Iterable[str], sizes: Iterable[int],
+              tier: str = "map", block_n: int | None = None,
+              interpret: bool | None = None) -> Iterator[dict]:
+        """Grid sweep over (domain × n_points), streaming one result per
+        cell — the NDJSON surface of ``POST /v1/evaluate``.  With more than
+        one visible device, each map-tier cell's λ-range is sharded across
+        devices via ``shard_map`` over the registry's ``jnp`` tier."""
+        import jax
+
+        domains = list(domains)
+        sizes = [int(s) for s in sizes]
+        if not domains or not sizes:
+            raise ValueError("sweep needs non-empty 'domains' and sizes")
+        n_dev = len(jax.devices())
+        for name in domains:
+            for n in sizes:
+                q = {"domain": name, "n_points": n, "tier": tier}
+                if block_n is not None:
+                    q["block_n"] = block_n
+                if interpret is not None:
+                    q["interpret"] = interpret
+                if tier == "map" and n_dev > 1:
+                    res = self._sharded_cell(name, n, n_dev)
+                else:
+                    res = self.evaluate(q)
+                with self._mu:
+                    self.stats.sweep_cells += 1
+                yield res
+
+    def _sharded_cell(self, name: str, n_points: int, n_dev: int) -> dict:
+        """One sweep cell evaluated across every visible device: shard_map
+        splits the λ-range, each device runs the registry's traceable jnp
+        map on its shard.  The compiled program is cached like any other
+        executable (tier ``map_sharded``)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        if name not in DOMAINS:
+            raise KeyError(name)
+        dom = DOMAINS[name]
+        if n_points > self.max_points:
+            raise ValueError(
+                f"n_points {n_points} > max {self.max_points}")
+        padded = -(-n_points // n_dev) * n_dev
+        ndigits = max(dom.level_for_points(padded), 1) \
+            if dom.kind == "fractal" else 13
+        fn = REGISTRY.tier(name, None, "jnp")
+        devices = np.array(jax.devices())
+
+        def build():
+            mesh = Mesh(devices, ("d",))
+
+            def run():
+                lams = jnp.arange(padded, dtype=jnp.int32)
+                return shard_map(
+                    lambda l: fn(l, ndigits),
+                    mesh=mesh, in_specs=P("d"), out_specs=P("d"))(lams)
+
+            return run
+
+        if self.cache is not None:
+            key = cc.ExecKey(f"domain:{name}", "map_sharded",
+                             (padded, n_dev), 0, ndigits)
+            call = self.cache.get(key, build)
+        else:
+            call = build()
+        coords = np.asarray(call())[:n_points]
+        with self._mu:
+            self.stats.queries += 1
+            self.stats.sharded_dispatches += 1
+            self.stats.points += n_points
+            self.stats.padded_points += padded
+        return {
+            "index": 0, "domain": name, "tier": "map",
+            "n_points": n_points, "start": 0, "extent": None,
+            "block_n": 0, "ndigits": ndigits, "padded": padded,
+            "interpret": False, "group": 0, "group_size": 1,
+            "executable": "sharded", "devices": n_dev,
+            "coords": coords,
+        }
+
+    # -- introspection -----------------------------------------------------
+    def stats_dict(self) -> dict:
+        with self._mu:
+            out = self.stats.as_dict()
+        if self.cache is not None:
+            out["compile_cache"] = self.cache.stats_dict()
+        return out
+
+
+def wire_result(res: dict) -> dict:
+    """JSON-safe form of one evaluation result (arrays become lists)."""
+    out = dict(res)
+    if "coords" in out:
+        out["coords"] = np.asarray(out["coords"]).tolist()
+    if "mask" in out:
+        out["mask"] = np.asarray(out["mask"]).tolist()
+    return out
+
+
+def hydrate_result(payload: dict) -> dict:
+    """Client-side inverse of :func:`wire_result`."""
+    out = dict(payload)
+    if out.get("coords") is not None:
+        out["coords"] = np.asarray(out["coords"], dtype=np.int32)
+    if out.get("mask") is not None:
+        out["mask"] = np.asarray(out["mask"], dtype=np.int32)
+    return out

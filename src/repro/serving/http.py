@@ -7,6 +7,11 @@ sharing across machines means a network surface.  This module wraps a
 ``ThreadingHTTPServer`` speaking JSON:
 
     POST   /v1/derive           {domain, model, stage}  -> wire payload
+    POST   /v1/evaluate         batched map evaluation: {domain|key, tier,
+                                n_points|extent, ...} single query, or
+                                {queries: [...]} heterogeneous batch, or
+                                {sweep: {domains, sizes}} NDJSON stream —
+                                mapped coordinates, not mapping code
     GET    /v1/artifact/<key>   cached derivation record by content address
                                 (local tiers only — no peer probe)
     DELETE /v1/artifact/<key>   drop one record from this node's tiers
@@ -131,6 +136,8 @@ class MappingHTTPServer:
         self.forward_timeout = 30.0
         self._metrics: dict[str, _EndpointMetrics] = {}
         self._metrics_mu = threading.Lock()
+        self._evaluator = None       # EvaluationService, built on first use
+        self._evaluator_mu = threading.Lock()
         self._conn_sockets: set = set()  # live keep-alive connections
         self._conn_mu = threading.Lock()
         handler = _make_handler(self)
@@ -143,6 +150,18 @@ class MappingHTTPServer:
     @property
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
+
+    @property
+    def evaluator(self):
+        """The node's EvaluationService, constructed on first evaluate
+        request — a derive-only node never imports jax/kernels for it."""
+        with self._evaluator_mu:
+            if self._evaluator is None:
+                from repro.serving.evaluate import EvaluationService
+
+                self._evaluator = EvaluationService(
+                    artifact_resolver=self.service.artifact_for_key)
+            return self._evaluator
 
     def attach_cluster(self, cluster) -> "ClusterMembership":  # noqa: F821
         """Join this node to a sharded fleet: wire the membership's ring
@@ -241,6 +260,14 @@ class MappingHTTPServer:
             out["cluster"] = {**self.cluster.stats(),
                               "forwarded": self.forwarded,
                               "forward_errors": self.forward_errors}
+        with self._evaluator_mu:
+            evaluator = self._evaluator
+        if evaluator is not None:
+            # stats_dict embeds the compile-cache counters; surface them at
+            # the top level too so scrapers find one well-known key
+            ev = evaluator.stats_dict()
+            out["compile_cache"] = ev.pop("compile_cache", None)
+            out["evaluate"] = ev
         return out
 
 
@@ -363,6 +390,8 @@ def _make_handler(server: MappingHTTPServer):
         def do_POST(self) -> None:  # noqa: N802
             if self.path == "/v1/derive":
                 self._timed("derive", self._derive)
+            elif self.path == "/v1/evaluate":
+                self._timed("evaluate", self._evaluate)
             elif self.path == "/v1/grid":
                 self._timed("grid", self._grid)
             elif self.path.startswith("/v1/replicate/"):
@@ -403,6 +432,10 @@ def _make_handler(server: MappingHTTPServer):
                 payload["cluster"] = {**server.cluster.stats(),
                                       "forwarded": server.forwarded,
                                       "forward_errors": server.forward_errors}
+            with server._evaluator_mu:
+                evaluator = server._evaluator
+            if evaluator is not None and evaluator.cache is not None:
+                payload["compile_cache"] = evaluator.cache.stats_dict()
             self._send_json(200, payload)
 
         def _cluster_view(self) -> None:
@@ -488,6 +521,72 @@ def _make_handler(server: MappingHTTPServer):
                 self.wfile.write(payload)
                 return True
             return False
+
+        def _evaluate(self) -> None:
+            """Batched map evaluation: mapped coordinates (or a BB
+            membership mask), not mapping code.  Three body shapes:
+
+              {domain|key, tier?, n_points|extent, ...}   one query
+              {"queries": [...]}                           heterogeneous batch
+              {"sweep": {"domains": [...], "sizes": [...],
+                         "tier"?, "block_n"?, "interpret"?}}  NDJSON stream
+
+            Unknown domains / artifact keys answer 404, malformed bodies
+            400 (both via ``_timed``'s exception mapping)."""
+            from repro.serving import evaluate as ev
+
+            body = self._read_body()
+            evaluator = server.evaluator
+            sweep = body.get("sweep")
+            if sweep is not None:
+                if not isinstance(sweep, dict):
+                    raise ValueError("'sweep' must be a JSON object")
+                self._evaluate_sweep(evaluator, sweep)
+                return
+            queries = body.get("queries")
+            if queries is not None:
+                if not isinstance(queries, list):
+                    raise ValueError("'queries' must be a list")
+                results, meta = evaluator.evaluate_batch(queries)
+                self._send_json(200, {
+                    "results": [ev.wire_result(r) for r in results],
+                    "batch": meta,
+                })
+                return
+            self._send_json(200, ev.wire_result(evaluator.evaluate(body)))
+
+        def _evaluate_sweep(self, evaluator, sweep: dict) -> None:
+            """NDJSON-streamed grid sweep (same framing as /v1/grid): one
+            result line per (domain, n_points) cell as it resolves."""
+            from repro.serving import evaluate as ev
+
+            domains = sweep.get("domains")
+            sizes = sweep.get("sizes")
+            if not isinstance(domains, list) or not domains:
+                raise ValueError("'sweep.domains' must be a non-empty list")
+            if not isinstance(sizes, list) or not sizes:
+                raise ValueError("'sweep.sizes' must be a non-empty list")
+            cells = evaluator.sweep(
+                domains, sizes, tier=sweep.get("tier", "map"),
+                block_n=sweep.get("block_n"),
+                interpret=sweep.get("interpret"))
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-ndjson")
+            # stream length unknowable up front: close-delimit (matches
+            # /v1/grid; send_header flips close_connection)
+            self.send_header("Connection", "close")
+            self.end_headers()
+            try:
+                for res in cells:
+                    line = json.dumps(ev.wire_result(res)) + "\n"
+                    self.wfile.write(line.encode())
+                    self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                raise
+            except Exception as e:  # noqa: BLE001 — headers are gone
+                self.wfile.write(
+                    (json.dumps({"error": f"{type(e).__name__}: {e}"}) +
+                     "\n").encode())
 
         def _artifact(self) -> None:
             key = self._key_from_path("/v1/artifact/")

@@ -327,6 +327,31 @@ class MappingService:
         """The persistent product of a served cell (None if it failed)."""
         return self.derive(domain, model, stage).artifact
 
+    def result_for_key(self, key: str) -> pipeline.DerivationResult | None:
+        """Rehydrate a stored derivation by content address (local tiers
+        only — no derivation is triggered, no peer sweep is paid).  This is
+        how the evaluation plane resolves ``key`` queries: a client that
+        learned a cell's content address from a derive can ask for mapped
+        coordinates without respelling (domain, model, stage)."""
+        if self.store is None:
+            return None
+        res = self.store.load_result(key)
+        if res is not None:
+            return res
+        rec = self.store.load(key, local_only=True)
+        if rec is None:
+            return None
+        res = pipeline.result_from_record(rec, DOMAINS[rec["domain"]], key)
+        self.store.remember_result(key, res)
+        return res
+
+    def artifact_for_key(self, key: str) -> MappingArtifact | None:
+        """The stored artifact for a content address (None when the record
+        is absent or the derivation failed) — the ``artifact_resolver``
+        the HTTP layer hands to its EvaluationService."""
+        res = self.result_for_key(key)
+        return res.artifact if res is not None else None
+
     # -- streaming sweeps --------------------------------------------------
     def run_grid(
         self,

@@ -1,0 +1,347 @@
+"""Evaluation plane end-to-end: batched EvaluationService grouping +
+correctness against the direct kernel path, artifact-key resolution through
+the store, the POST /v1/evaluate wire surface (single / batch / NDJSON
+sweep / error codes), client retry-and-fallback parity with derive, and the
+multi-device sharded sweep (subprocess, fake devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import compile_cache as cc
+from repro.core.artifact import ArtifactCache
+from repro.core.backends import MockLLMBackend
+from repro.core.maps import np_map
+from repro.kernels.domain_map import ops
+from repro.serving import (
+    MappingHTTPServer, MappingService, RemoteMappingService,
+    RemoteServiceError,
+)
+from repro.serving.evaluate import (
+    EvaluationService, hydrate_result, wire_result,
+)
+
+MODEL = "OSS:120b"
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def fresh_evaluator(**kw) -> EvaluationService:
+    kw.setdefault("compile_cache", cc.CompileCache(max_entries=32))
+    return EvaluationService(**kw)
+
+
+def local_service(tmp_path) -> MappingService:
+    return MappingService(cache=ArtifactCache(tmp_path),
+                          backend_factory=MockLLMBackend,
+                          n_validate=2000, sample_every=1)
+
+
+# ---------------------------------------------------------------------------
+# batching semantics + correctness
+# ---------------------------------------------------------------------------
+
+
+def test_batch_groups_share_executables_and_match_direct_kernels():
+    """Same-family map queries merge into one padded launch; every member's
+    slice is byte-equal to the uncached direct kernel call."""
+    ev = fresh_evaluator()
+    queries = [
+        {"domain": "tri2d", "n_points": 100, "block_n": 128},
+        {"domain": "tri2d", "n_points": 200, "block_n": 128},
+        {"domain": "tri2d", "n_points": 300, "block_n": 128},
+        {"domain": "gasket2d", "n_points": 128, "block_n": 128},
+        {"domain": "tri2d", "tier": "membership", "extent": [16, 16],
+         "block_n": 128},
+        {"domain": "tri2d", "tier": "membership", "extent": [16, 16],
+         "block_n": 128},
+    ]
+    results, meta = ev.evaluate_batch(queries)
+    assert meta["queries"] == 6
+    # tri2d maps merge, gasket2d is its own group, the twin membership
+    # boxes share one launch: 3 groups, 3 dispatches
+    assert meta["groups"] == meta["dispatches"] == 3
+    tri_groups = {r["group"] for r in results[:3]}
+    assert len(tri_groups) == 1
+    assert results[0]["group_size"] == 3
+    assert results[4]["group"] == results[5]["group"]
+    assert ev.stats.shared == 3
+    assert ev.cache.stats.misses == 3  # one compile per group
+
+    for r, q in zip(results[:4], queries[:4]):
+        direct = ops.map_coordinates(
+            q["domain"], q["n_points"], block_n=q["block_n"],
+            interpret=True, compile_cache=None)
+        np.testing.assert_array_equal(r["coords"], direct)
+        assert r["coords"].shape == (q["n_points"],
+                                     2 if q["domain"] != "msimplex3" else 3)
+        ref = np_map(q["domain"], np.arange(q["n_points"], dtype=np.int64))
+        np.testing.assert_array_equal(r["coords"].astype(np.int64), ref)
+    direct_mask = ops.bb_membership("tri2d", (16, 16), block_n=128,
+                                    interpret=True, compile_cache=None)
+    np.testing.assert_array_equal(results[4]["mask"], direct_mask)
+    np.testing.assert_array_equal(results[5]["mask"], direct_mask)
+
+
+def test_repeat_batch_is_all_hits_and_lambda_range_equals_slice():
+    ev = fresh_evaluator()
+    first = ev.evaluate({"domain": "gasket2d", "n_points": 256,
+                         "block_n": 128})
+    assert first["executable"] == "miss"
+    again = ev.evaluate({"domain": "gasket2d", "n_points": 256,
+                         "block_n": 128})
+    assert again["executable"] == "hit"
+    assert ev.cache.stats.hits == 1
+    np.testing.assert_array_equal(first["coords"], again["coords"])
+
+    # a λ-range query [start, start+n) equals the slice of a from-zero run
+    tail = ev.evaluate({"domain": "gasket2d", "n_points": 128, "start": 128,
+                        "block_n": 128})
+    full = ops.map_coordinates("gasket2d", 256, block_n=128, interpret=True,
+                               compile_cache=None)
+    np.testing.assert_array_equal(tail["coords"], full[128:256])
+    assert tail["start"] == 128
+
+
+def test_query_validation_and_error_accounting():
+    ev = fresh_evaluator()
+    bad = [
+        ({"domain": "tri2d"}, "n_points"),
+        ({"domain": "tri2d", "n_points": 0}, "n_points"),
+        ({"domain": "tri2d", "n_points": -5}, "n_points"),
+        ({"domain": "tri2d", "n_points": True}, "n_points"),
+        ({"domain": "tri2d", "n_points": 1 << 22}, "max"),
+        ({"domain": "tri2d", "n_points": 10, "start": -1}, "start"),
+        ({"domain": "tri2d", "n_points": 10, "tier": "nope"}, "tier"),
+        ({"domain": "tri2d", "n_points": 10, "block_n": 0}, "block_n"),
+        ({"domain": "tri2d", "n_points": 10, "interpret": "yes"},
+         "interpret"),
+        ({"domain": "tri2d", "tier": "membership"}, "extent"),
+        ({"domain": "tri2d", "tier": "membership", "extent": []}, "extent"),
+        ({"domain": "tri2d", "tier": "membership", "extent": [4, 4, 4]},
+         "axes"),
+        ({"domain": "msimplex3", "tier": "membership",
+          "extent": [1 << 8, 1 << 8, 1 << 8]}, "max"),
+        ({"key": "not-hex"}, "key"),
+        ({}, "domain"),
+        ("not a dict", "object"),
+    ]
+    for query, needle in bad:
+        with pytest.raises(ValueError, match=needle):
+            ev.evaluate(query)  # type: ignore[arg-type]
+    with pytest.raises(KeyError):
+        ev.evaluate({"domain": "atlantis", "n_points": 10})
+    with pytest.raises(ValueError, match="empty"):
+        ev.evaluate_batch([])  # rejected pre-admission, not an eval error
+    assert ev.stats.errors == len(bad) + 1
+    assert ev.stats.queries == 0          # nothing was ever dispatched
+    assert ev.cache.stats.misses == 0
+
+
+def test_artifact_key_queries_resolve_through_the_store(tmp_path):
+    """A derived artifact's content address drives the mapped kernel — the
+    paper's Phase-4 gate — and produces ground-truth coordinates."""
+    svc = local_service(tmp_path)
+    res = svc.derive("tri2d", MODEL, 20)
+    ev = fresh_evaluator(artifact_resolver=svc.artifact_for_key)
+
+    got = ev.evaluate({"key": res.cache_key, "n_points": 150,
+                       "block_n": 128})
+    assert got["domain"] == "tri2d"
+    ref = np_map("tri2d", np.arange(150, dtype=np.int64))
+    np.testing.assert_array_equal(got["coords"].astype(np.int64), ref)
+    # the artifact owns its executable identity (content-addressed), so a
+    # same-shape domain query compiles separately
+    dom = ev.evaluate({"domain": "tri2d", "n_points": 150, "block_n": 128})
+    np.testing.assert_array_equal(dom["coords"], got["coords"])
+    assert ev.cache.stats.misses == 2
+    fps = {k.fingerprint for k in ev.cache.keys()}
+    assert f"artifact:{res.cache_key}" in fps and "domain:tri2d" in fps
+
+    with pytest.raises(KeyError):
+        ev.evaluate({"key": "ab" * 32, "n_points": 10})  # never stored
+    with pytest.raises(ValueError, match="64-hex"):
+        ev.evaluate({"key": "xyz", "n_points": 10})
+    bare = fresh_evaluator()  # no resolver attached
+    with pytest.raises(ValueError, match="resolve artifact keys"):
+        bare.evaluate({"key": res.cache_key, "n_points": 10})
+
+
+def test_sweep_streams_every_cell_and_wire_roundtrip():
+    ev = fresh_evaluator()
+    cells = list(ev.sweep(["tri2d", "gasket2d"], [64, 128], block_n=64))
+    assert len(cells) == 4
+    assert ev.stats.sweep_cells == 4
+    assert [(c["domain"], c["n_points"]) for c in cells] == [
+        ("tri2d", 64), ("tri2d", 128), ("gasket2d", 64), ("gasket2d", 128)]
+    # wire_result/hydrate_result round-trip through JSON byte-identically
+    for c in cells:
+        back = hydrate_result(json.loads(json.dumps(wire_result(c))))
+        np.testing.assert_array_equal(back["coords"], c["coords"])
+        assert back["coords"].dtype == np.int32
+    stats = ev.stats_dict()
+    assert stats["queries"] == 4
+    assert stats["compile_cache"]["misses"] == ev.cache.stats.misses
+    assert 0 <= stats["padding_overhead"] < 1
+
+
+# ---------------------------------------------------------------------------
+# wire surface: POST /v1/evaluate
+# ---------------------------------------------------------------------------
+
+
+def test_http_evaluate_single_batch_and_sweep(tmp_path):
+    svc = local_service(tmp_path)
+    with MappingHTTPServer(svc) as server:
+        client = RemoteMappingService(server.url)
+
+        single = client.evaluate("tri2d", n_points=200, block_n=128)
+        local = ops.map_coordinates("tri2d", 200, block_n=128,
+                                    interpret=True, compile_cache=None)
+        np.testing.assert_array_equal(single["coords"], local)
+
+        # derived artifact, evaluated by content address over the wire
+        res = client.derive("tri2d", MODEL, 20)
+        by_key = client.evaluate(key=res.cache_key, n_points=128,
+                                 block_n=128)
+        np.testing.assert_array_equal(
+            by_key["coords"].astype(np.int64),
+            np_map("tri2d", np.arange(128, dtype=np.int64)))
+
+        batch = client.evaluate_batch([
+            {"domain": "tri2d", "n_points": 100, "block_n": 128},
+            {"domain": "tri2d", "n_points": 200, "block_n": 128},
+            {"domain": "tri2d", "tier": "membership", "extent": [12, 12]},
+        ])
+        assert len(batch) == 3
+        assert batch[0]["group"] == batch[1]["group"]
+        np.testing.assert_array_equal(batch[1]["coords"], local)
+        np.testing.assert_array_equal(
+            batch[2]["mask"],
+            ops.bb_membership("tri2d", (12, 12), interpret=True,
+                              compile_cache=None))
+
+        swept = list(client.evaluate_sweep(["tri2d", "gasket2d"], [64, 128],
+                                           block_n=64))
+        assert len(swept) == 4
+        assert all(isinstance(c["coords"], np.ndarray) for c in swept)
+
+        metrics = client.metrics()
+        assert metrics["evaluate"]["queries"] >= 8
+        assert metrics["evaluate"]["batches"] >= 3
+        assert metrics["evaluate"]["sweep_cells"] == 4
+        assert metrics["compile_cache"]["misses"] >= 1
+        assert metrics["http"]["evaluate"]["requests"] >= 4
+        assert metrics["http"]["evaluate"]["p95_ms"] > 0
+        assert client.store_stats()["compile_cache"]["entries"] >= 1
+
+
+def test_http_evaluate_error_codes(tmp_path):
+    svc = local_service(tmp_path)
+    with MappingHTTPServer(svc) as server:
+        client = RemoteMappingService(server.url)
+        with pytest.raises(RemoteServiceError) as e404:
+            client.evaluate("atlantis", n_points=10)
+        assert e404.value.status == 404
+        with pytest.raises(RemoteServiceError) as k404:
+            client.evaluate(key="ab" * 32, n_points=10)  # never stored
+        assert k404.value.status == 404
+        with pytest.raises(RemoteServiceError) as e400:
+            client.evaluate("tri2d")  # no n_points
+        assert e400.value.status == 400
+        with pytest.raises(RemoteServiceError) as b400:
+            client._call_json("/v1/evaluate", {"queries": "nope"})
+        assert b400.value.status == 400
+        with pytest.raises(RemoteServiceError) as s400:
+            client._call_json("/v1/evaluate", {"sweep": {"domains": []}})
+        assert s400.value.status == 400
+        # a batch with one bad member fails atomically — nothing dispatched
+        before = client.metrics()["evaluate"]["queries"]
+        with pytest.raises(RemoteServiceError) as mix:
+            client.evaluate_batch([
+                {"domain": "tri2d", "n_points": 10},
+                {"domain": "tri2d", "n_points": -1},
+            ])
+        assert mix.value.status == 400
+        assert client.metrics()["evaluate"]["queries"] == before
+        # malformed requests must not poison the endpoint
+        assert client.evaluate("tri2d", n_points=16)["n_points"] == 16
+
+
+def test_client_evaluate_falls_back_like_derive(tmp_path):
+    """Dead server + configured fallback: evaluation degrades to the local
+    kernels (same bytes); without a fallback the transport error surfaces."""
+    local = local_service(tmp_path)
+    art = local.derive("tri2d", MODEL, 20)
+    client = RemoteMappingService("http://127.0.0.1:9", retries=1,
+                                  backoff=0.01, fallback=local)
+    got = client.evaluate("tri2d", n_points=150, block_n=128)
+    assert client.stats.fallbacks == 1
+    np.testing.assert_array_equal(
+        got["coords"],
+        ops.map_coordinates("tri2d", 150, block_n=128, interpret=True,
+                            compile_cache=None))
+    # artifact keys resolve against the fallback service's store
+    by_key = client.evaluate(key=art.cache_key, n_points=64, block_n=64)
+    np.testing.assert_array_equal(
+        by_key["coords"].astype(np.int64),
+        np_map("tri2d", np.arange(64, dtype=np.int64)))
+    swept = list(client.evaluate_sweep(["tri2d"], [64], block_n=64))
+    assert len(swept) == 1 and client.stats.fallbacks == 3
+    assert client.stats.retries >= 3
+
+    bare = RemoteMappingService("http://127.0.0.1:9", retries=0,
+                                backoff=0.01)
+    with pytest.raises(RemoteServiceError):
+        bare.evaluate("tri2d", n_points=10)
+    with pytest.raises(RemoteServiceError):
+        list(bare.evaluate_sweep(["tri2d"], [16]))
+    with pytest.raises(ValueError, match="'domain' or 'key'"):
+        bare.evaluate()
+    with pytest.raises(RemoteServiceError) as badkey:
+        bare.evaluate(key="nope")  # rejected before any round-trip
+    assert badkey.value.status == 400
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharded sweep (subprocess: 4 fake host devices)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import numpy as np
+    from repro.core.maps import np_map
+    from repro.serving.evaluate import EvaluationService
+
+    assert jax.device_count() == 4
+    ev = EvaluationService()
+    cells = list(ev.sweep(["tri2d", "gasket2d"], [100, 256]))
+    assert len(cells) == 4
+    for c in cells:
+        assert c["executable"] == "sharded" and c["devices"] == 4
+        ref = np_map(c["domain"], np.arange(c["n_points"], dtype=np.int64))
+        np.testing.assert_array_equal(
+            np.asarray(c["coords"], dtype=np.int64), ref)
+    assert ev.stats.sharded_dispatches == 4
+    hits = ev.cache.stats.hits
+    list(ev.sweep(["tri2d"], [100]))        # repeat: compiled-cache hit
+    assert ev.cache.stats.hits == hits + 1
+    print("OK sharded-sweep")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_sweep_matches_ground_truth_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "OK sharded-sweep" in res.stdout, res.stdout
