@@ -32,7 +32,7 @@ def main() -> None:
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
                    help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
-                        "|cluster|evaluate")
+                        "|cluster|evaluate|concurrency")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
@@ -59,6 +59,7 @@ def main() -> None:
         "serving": serving.run,
         "cluster": serving.cluster_suite,
         "evaluate": serving.evaluate_suite,
+        "concurrency": serving.concurrency_suite,
     }
     report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
@@ -85,7 +86,8 @@ def main() -> None:
         }
     if serving.LAST_METRICS and ("serving" in report["suites"]
                                  or "cluster" in report["suites"]
-                                 or "evaluate" in report["suites"]):
+                                 or "evaluate" in report["suites"]
+                                 or "concurrency" in report["suites"]):
         report["serving"] = serving.LAST_METRICS
         # the serving suite runs against its own private store, invisible to
         # default_cache() — take its hit/miss deltas from the server's own

@@ -39,6 +39,15 @@ plane added in PR 6:
     projection from ``core/energy.py`` (an idealized lower bound; the
     ratio is recorded, not optimized).
 
+The concurrency sub-suite (``--only concurrency``) races the two frontends
+added across PR 1-7 head to head:
+
+  * hot-path derive throughput + p50/p95 at increasing keep-alive
+    connection counts (16/64/256 open connections), threaded
+    one-thread-per-connection server vs the asyncio event loop — the
+    acceptance bar is the async frontend sustaining the top connection
+    count at >= 2x the threaded hot-path throughput.
+
 Run metrics (cache hits, coalescing, p50/p95 from the server's own
 /metrics, per-tier store counters) land in ``LAST_METRICS`` so ``run.py
 --json`` can emit them.
@@ -48,6 +57,7 @@ from __future__ import annotations
 import concurrent.futures
 import statistics
 import tempfile
+import threading
 import time
 
 from benchmarks.common import emit, header
@@ -55,7 +65,8 @@ from repro.core.artifact import ArtifactCache
 from repro.core.backends import MockLLMBackend
 from repro.core.store import DiskStore, PeerStore, TieredStore, build_store
 from repro.serving import (
-    MappingHTTPServer, MappingService, RemoteMappingService, batching_factory,
+    AsyncMappingHTTPServer, MappingHTTPServer, MappingService,
+    RemoteMappingService, batching_factory,
 )
 
 MODEL = "OSS:120b"
@@ -458,7 +469,93 @@ def evaluate_suite(n_warm: int = 30, n_loops: int = 3) -> dict:
     return ev
 
 
+def _hammer(server, n_conns: int, per_conn: int) -> dict:
+    """n_conns keep-alive connections (one pooled client each) hammering a
+    hot cell: aggregate throughput + per-request p50/p95."""
+    lat: list[float] = []
+    mu = threading.Lock()
+    gate = threading.Barrier(n_conns + 1)
+
+    def worker():
+        c = RemoteMappingService(server.url)
+        c.derive("tri2d", MODEL, 100)  # opens + warms this thread's conn
+        gate.wait()
+        times = []
+        for _ in range(per_conn):
+            t0 = time.perf_counter()
+            assert c.derive("tri2d", MODEL, 100).cache_hit
+            times.append(time.perf_counter() - t0)
+        with mu:
+            lat.extend(times)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_conns)]
+    for t in threads:
+        t.start()
+    gate.wait()  # every connection is open before the clock starts
+    server_conns = getattr(server, "connections", n_conns)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    lat.sort()
+    return {
+        "connections": n_conns,
+        "server_connections": server_conns,
+        "requests": n_conns * per_conn,
+        "rps": n_conns * per_conn / dt,
+        "p50_us": lat[len(lat) // 2] * 1e6,
+        "p95_us": lat[int(len(lat) * 0.95)] * 1e6,
+    }
+
+
+def concurrency_suite(levels=(16, 64, 256), total: int = 2048) -> dict:
+    """Threaded vs async frontend under rising connection counts.
+
+    Both serve the same hot cell from identical private stores; every
+    request is a server-side cache hit, so the numbers are pure frontend
+    cost — thread-per-connection scheduling vs the event loop's inline
+    fast path."""
+    header("serving: concurrency (threaded vs async frontend)")
+    results: dict = {"levels": list(levels), "threaded": {}, "async": {}}
+    kw = dict(n_validate=20_000, sample_every=10)
+    for kind in ("threaded", "async"):
+        cache = ArtifactCache(tempfile.mkdtemp(prefix=f"bench_conc_{kind}_"))
+        factory = batching_factory(MockLLMBackend, max_batch=8,
+                                   max_wait=0.005)
+        service = MappingService(cache=cache, backend_factory=factory, **kw)
+        server = MappingHTTPServer(service) if kind == "threaded" \
+            else AsyncMappingHTTPServer(service)
+        with server:
+            RemoteMappingService(server.url).derive("tri2d", MODEL, 100)
+            for n in levels:
+                row = _hammer(server, n, max(4, total // n))
+                results[kind][n] = row
+                emit(f"concurrency_{kind}_{n}conn", row["p50_us"],
+                     f"{row['rps']:.0f}rps")
+
+    top = levels[-1]
+    speedup = (results["async"][top]["rps"] /
+               results["threaded"][top]["rps"])
+    results["top_connections"] = top
+    results["async_speedup_at_top"] = speedup
+    LAST_METRICS["concurrency"] = results
+    print(f"(at {top} connections: async "
+          f"{results['async'][top]['rps']:.0f}rps vs threaded "
+          f"{results['threaded'][top]['rps']:.0f}rps = {speedup:.1f}x; "
+          f"async p95 {results['async'][top]['p95_us'] / 1e3:.1f}ms)")
+    # acceptance: the event loop sustains the top connection count at
+    # >= 2x the threaded hot-path throughput
+    assert results["async"][top]["server_connections"] >= top, (
+        f"async frontend held {results['async'][top]['server_connections']} "
+        f"of {top} connections")
+    assert speedup >= 2.0, (
+        f"async frontend only {speedup:.2f}x threaded at {top} connections "
+        f"(need >= 2x)")
+    return results
+
+
 if __name__ == "__main__":
     run()
     cluster_suite()
     evaluate_suite()
+    concurrency_suite()

@@ -78,8 +78,30 @@ def build_prompt(domain: Domain, stage: int) -> str:
 
 
 # ---------------------------------------------------------------------------
-# Backend protocol
+# Backend protocol + typed errors
 # ---------------------------------------------------------------------------
+
+
+class LLMError(RuntimeError):
+    """Base class for backend failures the serving tier maps onto wire
+    codes — anything else escaping a backend is a plain 500."""
+
+
+class LLMBusyError(LLMError):
+    """Generation admission is saturated: shed now, retry later (HTTP 503).
+
+    The batching layer's ``AdmissionError`` subclasses this, so every
+    admission-control path in the stack speaks one retryable error type."""
+
+
+class LLMTimeoutError(LLMError):
+    """Generation exceeded its configured deadline (HTTP 504).  Retryable:
+    the work was cancelled, not answered — a repeat is safe (derivations
+    are idempotent by content address)."""
+
+
+class LLMUnavailableError(LLMError):
+    """The configured backend cannot be reached at all (HTTP 503)."""
 
 
 @dataclasses.dataclass
@@ -96,6 +118,70 @@ class LLMBackend(Protocol):
     name: str
 
     def generate(self, prompt: str, *, meta: dict) -> LLMResponse: ...
+
+
+class AsyncLLMBackend(Protocol):
+    """Async backend protocol for event-loop serving (``serving/aio.py``).
+
+    Lifecycle mirrors the sync protocol's implicit one, made explicit so a
+    server can manage it: ``start`` loads weights / spawns workers,
+    ``warm`` primes compilation with a throwaway generate, ``health_check``
+    answers liveness probes without generating, ``close`` releases
+    everything.  ``generate`` raises the typed errors above
+    (:class:`LLMBusyError` when admission is saturated,
+    :class:`LLMTimeoutError` past the deadline) so the HTTP layer can map
+    them to 503/504 without string matching."""
+
+    name: str
+
+    async def start(self) -> None: ...
+
+    async def close(self) -> None: ...
+
+    async def health_check(self) -> bool: ...
+
+    async def warm(self, timeout_s: float = 120.0) -> None: ...
+
+    async def generate(self, prompt: str, *, meta: dict) -> LLMResponse: ...
+
+
+class AsyncBackendAdapter:
+    """Wrap any sync :class:`LLMBackend` into the async protocol by
+    offloading ``generate`` to the running loop's default executor — the
+    bridge that lets the mock/ollama backends serve behind the asyncio
+    frontend without their own async implementations."""
+
+    def __init__(self, inner: LLMBackend):
+        self.inner = inner
+        self.name = inner.name
+
+    @property
+    def cache_fingerprint(self):
+        return getattr(self.inner, "cache_fingerprint", None)
+
+    async def start(self) -> None:
+        start = getattr(self.inner, "start", None)
+        if callable(start):
+            start()
+
+    async def close(self) -> None:
+        close = getattr(self.inner, "close", None)
+        if callable(close):
+            close()
+
+    async def health_check(self) -> bool:
+        return True
+
+    async def warm(self, timeout_s: float = 120.0) -> None:
+        return None
+
+    async def generate(self, prompt: str, *, meta: dict) -> LLMResponse:
+        import asyncio
+        import functools
+
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(
+            None, functools.partial(self.inner.generate, prompt, meta=meta))
 
 
 # ---------------------------------------------------------------------------
@@ -651,7 +737,9 @@ class OllamaBackend:
         self.power_w = power_w
 
     def generate(self, prompt: str, *, meta: dict) -> LLMResponse:
+        import socket
         import time
+        import urllib.error
         import urllib.request
 
         body = json.dumps(
@@ -662,8 +750,18 @@ class OllamaBackend:
             headers={"Content-Type": "application/json"},
         )
         t0 = time.monotonic()
-        with urllib.request.urlopen(req, timeout=600) as resp:  # noqa: S310
-            payload = json.loads(resp.read())
+        try:
+            with urllib.request.urlopen(req, timeout=600) as resp:  # noqa: S310
+                payload = json.loads(resp.read())
+        except (TimeoutError, socket.timeout) as e:
+            raise LLMTimeoutError(
+                f"ollama generate on {self.name!r} timed out") from e
+        except urllib.error.URLError as e:
+            if isinstance(e.reason, (TimeoutError, socket.timeout)):
+                raise LLMTimeoutError(
+                    f"ollama generate on {self.name!r} timed out") from e
+            raise LLMUnavailableError(
+                f"ollama at {self.host} unreachable: {e.reason}") from e
         dt = time.monotonic() - t0
         return LLMResponse(
             text=payload.get("response", ""), model=self.name,

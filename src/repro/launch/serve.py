@@ -16,6 +16,12 @@ transformer — see ``core/backends.EngineBackend``), or ``ollama`` (live
 local GGUF models).  Derive requests for the same model are admitted
 through a batching queue (``--max-batch`` / ``--max-wait`` /
 ``--max-pending``); same-cell requests coalesce inside the service.
+
+By default the service runs on the asyncio event-loop frontend
+(``serving/aio.py``) and — for the engine backend — continuous batching
+(``--decode-slots`` / ``--admission-timeout``): new derives join in-flight
+decode batches at the next step boundary.  ``--no-async`` restores the
+threaded ``ThreadingHTTPServer`` + gather-then-drain batching.
 """
 from __future__ import annotations
 
@@ -108,9 +114,17 @@ def _cluster_from_args(args, server):
 
 def serve_maps(args) -> None:
     """Boot the full stack: backend -> batching queue -> MappingService ->
-    HTTP frontend (-> cluster membership), then serve until interrupted."""
+    HTTP frontend (-> cluster membership), then serve until interrupted.
+
+    ``--async`` (the default) serves from the asyncio event-loop frontend
+    and, for the engine backend, drives generation through the continuous
+    batcher (step-interleaved cohorts, ``--decode-slots``); ``--no-async``
+    falls back to the threaded server + gather-then-drain batching."""
     from repro.core import compile_cache
-    from repro.serving import MappingHTTPServer, MappingService, batching_factory
+    from repro.serving import (
+        AsyncMappingHTTPServer, MappingHTTPServer, MappingService,
+        batching_factory, continuous_factory,
+    )
 
     # evaluation-plane knobs (flags win; REPRO_COMPILE_CACHE_* env fallback
     # is read inside configure_default/default_compile_cache)
@@ -121,13 +135,27 @@ def serve_maps(args) -> None:
             persist_dir=args.compile_cache_dir)
     cc = compile_cache.default_compile_cache()
 
-    factory = batching_factory(
-        _backend_factory(args), max_batch=args.max_batch,
-        max_wait=args.max_wait, max_pending=args.max_pending)
+    if args.use_async and args.backend == "engine":
+        # continuous batching: new derives join in-flight decodes at the
+        # next step boundary instead of waiting for the batch to drain
+        factory = continuous_factory(
+            _backend_factory(args), decode_slots=args.decode_slots,
+            max_pending=args.max_pending,
+            admission_timeout=args.admission_timeout)
+    else:
+        factory = batching_factory(
+            _backend_factory(args), max_batch=args.max_batch,
+            max_wait=args.max_wait, max_pending=args.max_pending)
     service = MappingService(store=_store_from_args(args),
                              backend_factory=factory,
                              n_validate=args.n_validate)
-    server = MappingHTTPServer(service, host=args.host, port=args.port)
+    if args.use_async:
+        server = AsyncMappingHTTPServer(
+            service, host=args.host, port=args.port,
+            max_pending=args.max_pending)
+        server.start()  # bind + loop up before cluster membership probes
+    else:
+        server = MappingHTTPServer(service, host=args.host, port=args.port)
     cluster = _cluster_from_args(args, server)
     store = service.store
     if store is None:
@@ -139,8 +167,12 @@ def serve_maps(args) -> None:
                 f"max_bytes={store.disk.max_bytes})"
                 if store.disk is not None else "diskless")
         desc = f"{disk} memory={mem} entries, peers={peers or 'none'}"
+    mode = "async" if args.use_async else "threaded"
     print(f"mapping service on {server.url}  "
-          f"(backend={args.backend}, store={desc})")
+          f"(backend={args.backend}, frontend={mode}, store={desc})")
+    if args.use_async and args.backend == "engine":
+        print(f"continuous batching: decode_slots={args.decode_slots} "
+              f"admission_timeout={args.admission_timeout}s")
     if cc is None:
         print("compile cache: off")
     else:
@@ -164,7 +196,10 @@ def serve_maps(args) -> None:
     finally:
         if cluster is not None:
             cluster.close()
-        server.httpd.server_close()
+        if args.use_async:
+            server.close()
+        else:
+            server.httpd.server_close()
 
 
 def lm_demo(args) -> None:
@@ -228,6 +263,20 @@ def main() -> None:
                    help="seconds the batcher waits to fill a batch")
     p.add_argument("--max-pending", type=int, default=256,
                    help="admission queue depth (beyond this: HTTP 503)")
+    p.add_argument("--async", dest="use_async", default=True,
+                   action=argparse.BooleanOptionalAction,
+                   help="serve from the asyncio event-loop frontend with "
+                        "continuous batching for the engine backend "
+                        "(--no-async falls back to the threaded server + "
+                        "gather-then-drain batching)")
+    p.add_argument("--decode-slots", type=int, default=8,
+                   help="continuous batching: max requests decoding "
+                        "concurrently across cohorts (engine backend, "
+                        "async mode)")
+    p.add_argument("--admission-timeout", type=float, default=30.0,
+                   metavar="SECONDS",
+                   help="continuous batching: a request waiting longer than "
+                        "this for a free decode slot fails with HTTP 504")
     # artifact-store lifecycle (see core/store.py)
     p.add_argument("--store-ttl", type=float, default=None, metavar="SECONDS",
                    help="evict records idle longer than this (default: never)")

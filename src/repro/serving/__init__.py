@@ -1,14 +1,22 @@
 """Serving layer: the LM prefill/decode engine (``engine``), the
 concurrency-safe mapping-artifact service (``map_service``), and its
-networked form — HTTP frontend (``http``), keep-alive remote client
-(``client``), per-model request batching/admission (``batching``), the
-consistent-hash sharded fleet layer (``cluster``: ring placement,
-membership heartbeats, anti-entropy repair), and the batched map
-*evaluation* hot path (``evaluate``: compiled-executable groups behind
-``POST /v1/evaluate``).
+networked form — threaded HTTP frontend (``http``), asyncio event-loop
+frontend (``aio``: inline hot path, backpressure-aware streaming),
+keep-alive remote client (``client``), per-model request
+batching/admission (``batching``: gather-then-drain) and continuous
+batching (``async_engine``: step-interleaved cohort scheduler for the
+engine backend), the consistent-hash sharded fleet layer (``cluster``:
+ring placement, membership heartbeats, anti-entropy repair), and the
+batched map *evaluation* hot path (``evaluate``: compiled-executable
+groups behind ``POST /v1/evaluate``).
 
 ``EvaluationService`` is imported lazily (it pulls in jax + the kernels) —
 ``from repro.serving.evaluate import EvaluationService``."""
+from repro.serving.aio import AsyncMappingHTTPServer  # noqa: F401
+from repro.serving.async_engine import (  # noqa: F401
+    AsyncEngineBackend, ContinuousBatcher, ContinuousBatchingBackend,
+    ContinuousStats, EngineStepper, continuous_factory,
+)
 from repro.serving.batching import (  # noqa: F401
     AdmissionError, BatchingBackend, BatchStats, batching_factory,
 )
@@ -16,7 +24,8 @@ from repro.serving.cluster import (  # noqa: F401
     ClusterMembership, HashRing,
 )
 from repro.serving.client import (  # noqa: F401
-    ClientStats, RemoteMappingService, RemoteServiceError,
+    ClientStats, RemoteBusyError, RemoteMappingService, RemoteServiceError,
+    RemoteTimeoutError,
 )
 from repro.serving.http import MappingHTTPServer  # noqa: F401
 from repro.serving.map_service import MappingService, ServiceStats  # noqa: F401

@@ -22,11 +22,15 @@ import queue
 import threading
 import time
 
-from repro.core.backends import LLMBackend, LLMResponse
+from repro.core.backends import LLMBackend, LLMBusyError, LLMResponse
 
 
-class AdmissionError(RuntimeError):
-    """The admission queue is full — shed load instead of queueing unboundedly."""
+class AdmissionError(LLMBusyError):
+    """The admission queue is full — shed load instead of queueing unboundedly.
+
+    Subclasses :class:`LLMBusyError` so every admission-control path in the
+    stack (threaded batcher, continuous batcher, async frontend) speaks one
+    retryable error type that the wire layer maps to 503."""
 
 
 @dataclasses.dataclass
@@ -117,12 +121,25 @@ class BatchingBackend:
             self._worker.start()
 
     def _collect(self) -> list[_Pending]:
-        """Oldest pending request + companions arriving within max_wait."""
+        """Oldest pending request + companions arriving within max_wait.
+
+        A full batch dispatches the instant the ``max_batch``-th request is in
+        hand: already-queued companions are drained without blocking first, and
+        the deadline loop is only entered for the remaining free slots — a
+        burst of ``max_batch`` arrivals never sleeps out ``max_wait``."""
         try:
             first = self._queue.get(timeout=0.1)
         except queue.Empty:
             return []
         batch = [first]
+        # eager pass: take whatever is already waiting, no timer involved
+        while len(batch) < self.max_batch:
+            try:
+                batch.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        if len(batch) >= self.max_batch:
+            return batch
         deadline = time.monotonic() + self.max_wait
         while len(batch) < self.max_batch:
             remaining = deadline - time.monotonic()

@@ -29,8 +29,12 @@ Failure policy, in order:
 
   * transport errors (connection refused / reset / timeout) retry with
     exponential backoff up to ``retries`` times;
-  * ``503`` (admission shed) is retryable the same way — the server asked
-    us to back off;
+  * ``503`` (admission shed) and ``504`` (backend deadline blown) are
+    retryable the same way — derivations are idempotent by content address,
+    so a resend is always safe; when every retry ends on one of these the
+    terminal error is *typed* (:class:`RemoteBusyError` /
+    :class:`RemoteTimeoutError`, which are also ``LLMBusyError`` /
+    ``LLMTimeoutError``) so callers branch without parsing messages;
   * other HTTP errors (400/404/500) raise :class:`RemoteServiceError`
     immediately — retrying a malformed or failing request won't help;
   * an owner-routed request whose owner is unreachable falls back to the
@@ -51,11 +55,15 @@ from urllib.parse import urlsplit
 
 from repro.core import pipeline
 from repro.core.artifact import MappingArtifact
+from repro.core.backends import LLMBusyError, LLMTimeoutError
 from repro.core.domains import Domain
 from repro.core.store import valid_key
 from repro.serving.map_service import MappingService
 
-_RETRYABLE_STATUS = (503,)
+#: 503 = admission shed (server asked us to back off); 504 = generation
+#: deadline blown server-side — both are safe to resend because derivations
+#: are idempotent by content address
+_RETRYABLE_STATUS = (503, 504)
 _TRANSPORT_ERRORS = (http.client.HTTPException, ConnectionError,
                      TimeoutError, OSError)
 
@@ -67,6 +75,27 @@ class RemoteServiceError(RuntimeError):
     def __init__(self, message: str, status: int | None = None):
         super().__init__(message)
         self.status = status
+
+
+class RemoteBusyError(RemoteServiceError, LLMBusyError):
+    """Every retry was answered 503: the server is persistently shedding.
+    Doubly typed so ``except LLMBusyError`` works across the process
+    boundary — the remote stack raises what the local stack would."""
+
+
+class RemoteTimeoutError(RemoteServiceError, LLMTimeoutError):
+    """Every retry was answered 504: the backend kept blowing its deadline.
+    ``except LLMTimeoutError`` catches it, local or remote."""
+
+
+def _exhausted_error(path: str, attempts: int, status: int | None,
+                     last: Exception) -> RemoteServiceError:
+    """The terminal error after retries run dry — typed by the last status
+    so callers can branch on busy/timeout without parsing messages."""
+    cls = {503: RemoteBusyError, 504: RemoteTimeoutError}.get(
+        status or 0, RemoteServiceError)
+    return cls(f"{path} unreachable after {attempts} attempts: {last}",
+               status=status)
 
 
 class _StatusError(Exception):
@@ -288,9 +317,7 @@ class RemoteMappingService:
                 last = e
                 continue
         status = last.status if isinstance(last, _StatusError) else None
-        raise RemoteServiceError(
-            f"{path} unreachable after {self.retries + 1} attempts: {last}",
-            status=status) from last
+        raise _exhausted_error(path, self.retries + 1, status, last) from last
 
     def _call_json(self, path: str, body: dict | None = None,
                    method: str | None = None, base: str | None = None) -> dict:

@@ -72,8 +72,12 @@ from urllib.parse import parse_qs, urlsplit
 
 from repro.core import pipeline
 from repro.core import store as store_mod
+from repro.core.backends import (
+    LLMBusyError,
+    LLMTimeoutError,
+    LLMUnavailableError,
+)
 from repro.core.domains import DOMAINS
-from repro.serving.batching import AdmissionError, BatchingBackend
 from repro.serving.map_service import MappingService
 
 MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
@@ -82,6 +86,29 @@ MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
 #: node serves it locally even if its ring view disagrees, so two nodes with
 #: momentarily different views can never bounce a request between them
 FORWARDED_HEADER = "X-Repro-Forwarded"
+
+
+def map_error(e: BaseException) -> tuple[int, dict]:
+    """Typed exception -> (status, JSON body), shared by the threaded and
+    asyncio frontends so the two paths can never disagree on a wire code:
+
+        LLMTimeoutError                    -> 504 retryable (deadline blown;
+                                              derivations are idempotent)
+        LLMBusyError (incl AdmissionError) -> 503 retryable (shed, back off)
+        LLMUnavailableError                -> 503 retryable (backend down)
+        KeyError                           -> 404 (unknown domain/model/key)
+        ValueError / bad JSON              -> 400
+        anything else                      -> 500
+    """
+    if isinstance(e, LLMTimeoutError):
+        return 504, {"error": str(e), "retryable": True}
+    if isinstance(e, (LLMBusyError, LLMUnavailableError)):
+        return 503, {"error": str(e), "retryable": True}
+    if isinstance(e, KeyError):
+        return 404, {"error": f"unknown name: {e}"}
+    if isinstance(e, (ValueError, json.JSONDecodeError)):
+        return 400, {"error": str(e)}
+    return 500, {"error": f"{type(e).__name__}: {e}"}
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -115,6 +142,42 @@ class _EndpointMetrics:
             "p50_ms": _percentile(sample, 0.50) * 1e3,
             "p95_ms": _percentile(sample, 0.95) * 1e3,
         }
+
+
+def collect_metrics(service: MappingService, http: dict, cluster=None,
+                    forwarded: int = 0, forward_errors: int = 0,
+                    evaluator=None) -> dict:
+    """The shared /metrics payload shape — one builder for the threaded and
+    asyncio frontends so scrapers see identical keys from either."""
+    out = {
+        "service": service.stats_snapshot().as_dict(),
+        "inflight": service.inflight_count(),
+        "http": http,
+        "batching": {},
+    }
+    for model, backend in service.backends().items():
+        # duck-typed: BatchingBackend.BatchStats and the continuous
+        # batcher's ContinuousStats both publish as_dict()
+        stats = getattr(backend, "stats", None)
+        if hasattr(stats, "as_dict"):
+            out["batching"][model] = stats.as_dict()
+    if service.store is not None:
+        # counters only — sizing the store (a directory glob) is the
+        # explicit /v1/store/stats endpoint, not the scrape path
+        out["store"] = {"hits": service.store.hits,
+                        "misses": service.store.misses,
+                        "tiers": service.store.stats()}
+    if cluster is not None:
+        out["cluster"] = {**cluster.stats(),
+                          "forwarded": forwarded,
+                          "forward_errors": forward_errors}
+    if evaluator is not None:
+        # stats_dict embeds the compile-cache counters; surface them at
+        # the top level too so scrapers find one well-known key
+        ev = evaluator.stats_dict()
+        out["compile_cache"] = ev.pop("compile_cache", None)
+        out["evaluate"] = ev
+    return out
 
 
 class MappingHTTPServer:
@@ -237,38 +300,14 @@ class MappingHTTPServer:
     def metrics(self) -> dict:
         """The /metrics payload: one shared ServiceStats view + HTTP-layer
         latency percentiles + batching queues + per-tier store counters."""
-        svc = self.service
-        out = {
-            "service": svc.stats_snapshot().as_dict(),
-            "inflight": svc.inflight_count(),
-            "http": {},
-            "batching": {},
-        }
         with self._metrics_mu:
-            out["http"] = {name: em.as_dict()
-                           for name, em in self._metrics.items()}
-        for model, backend in svc.backends().items():
-            if isinstance(backend, BatchingBackend):
-                out["batching"][model] = backend.stats.as_dict()
-        if svc.store is not None:
-            # counters only — sizing the store (a directory glob) is the
-            # explicit /v1/store/stats endpoint, not the scrape path
-            out["store"] = {"hits": svc.store.hits,
-                            "misses": svc.store.misses,
-                            "tiers": svc.store.stats()}
-        if self.cluster is not None:
-            out["cluster"] = {**self.cluster.stats(),
-                              "forwarded": self.forwarded,
-                              "forward_errors": self.forward_errors}
+            http = {name: em.as_dict() for name, em in self._metrics.items()}
         with self._evaluator_mu:
             evaluator = self._evaluator
-        if evaluator is not None:
-            # stats_dict embeds the compile-cache counters; surface them at
-            # the top level too so scrapers find one well-known key
-            ev = evaluator.stats_dict()
-            out["compile_cache"] = ev.pop("compile_cache", None)
-            out["evaluate"] = ev
-        return out
+        return collect_metrics(
+            self.service, http, cluster=self.cluster,
+            forwarded=self.forwarded, forward_errors=self.forward_errors,
+            evaluator=evaluator)
 
 
 def _make_handler(server: MappingHTTPServer):
@@ -352,18 +391,10 @@ def _make_handler(server: MappingHTTPServer):
                 fn()
             except (BrokenPipeError, ConnectionResetError):
                 ok = False  # client went away mid-response: nothing to send
-            except AdmissionError as e:
-                ok = False
-                self._send_json(503, {"error": str(e), "retryable": True})
-            except KeyError as e:
-                ok = False
-                self._send_json(404, {"error": f"unknown name: {e}"})
-            except (ValueError, json.JSONDecodeError) as e:
-                ok = False
-                self._send_json(400, {"error": str(e)})
             except Exception as e:  # noqa: BLE001 — surface, don't kill thread
                 ok = False
-                self._send_json(500, {"error": f"{type(e).__name__}: {e}"})
+                status, payload = map_error(e)
+                self._send_json(status, payload)
             finally:
                 server.observe(endpoint, time.monotonic() - t0, ok)
 

@@ -184,6 +184,36 @@ class MappingService:
         return key
 
     # -- serving -----------------------------------------------------------
+    def try_cached(self, domain: str | Domain, model: str,
+                   stage: int = 100) -> pipeline.DerivationResult | None:
+        """Non-blocking hot path: the cell's result if it is already resident
+        in the local tiers, else ``None`` — never coalesces, never locks,
+        never probes peers, never runs the pipeline.
+
+        This is the path an event-loop frontend can serve *inline*: after the
+        first request for a (domain, model, stage) the memoized content
+        address plus the memory tier make this a pair of dict lookups, so a
+        hot cell costs no thread hop.  A miss means the caller should fall
+        through to :meth:`derive` (off the event loop)."""
+        if self.store is None:
+            return None
+        name = domain.name if isinstance(domain, Domain) else domain
+        key = self._request_keys.get((name, model, stage))
+        if key is None:
+            return None  # cold cell: derive() will build + memoize the key
+        res = self.store.load_result(key)
+        if res is None:
+            rec = self.store.load(key, local_only=True)
+            if rec is None:
+                return None
+            res = pipeline.result_from_record(
+                rec, self._domain(domain), key)
+            self.store.remember_result(key, res)
+        with self._mu:
+            self.stats.requests += 1
+            self.stats.cache_hits += 1
+        return res
+
     def derive(
         self,
         domain: str | Domain,
@@ -199,8 +229,13 @@ class MappingService:
                 self.stats.requests += 1
                 self.stats.errors += 1
             raise
+        name = domain.name if isinstance(domain, Domain) else domain
         with self._mu:
             self.stats.requests += 1
+            # memoize the cell's content address so later try_cached()
+            # calls (the event-loop fast path) resolve without rebuilding
+            # the request
+            self._request_keys.setdefault((name, model, stage), req.key)
         try:
             return self._derive_admitted(req, gt)
         except BaseException:
