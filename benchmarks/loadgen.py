@@ -1,0 +1,397 @@
+"""Trace-driven load generator + SLO harness for a live mapping fleet.
+
+Synthesizes a request trace with the skew real caches live under — cell
+popularity follows a zipf(s) law, so a handful of hot cells dominate while
+a long tail stays cold — mixes in the other serving ops (evaluate, grid
+sweeps, artifact fetches), optionally shapes arrivals into bursts, then
+replays the trace against one or more server URLs from a closed-loop
+worker pool.  Every request yields a latency record; the run folds them
+into an SLO report (p50/p95/p99, shed rate, error rate, per-op breakdown)
+that the CLI can *enforce*: a violated ``--slo-p99-ms`` / ``--max-shed-rate``
+/ ``--max-error-rate`` bound exits non-zero, which is what makes the CI
+loadgen leg a regression gate rather than a dashboard.
+
+Programmatic:
+
+    from benchmarks.loadgen import LoadSpec, run
+    records, report = run(["http://127.0.0.1:8000"], LoadSpec(requests=500))
+
+CLI (against a running fleet, or self-hosting one with ``--nodes``):
+
+    PYTHONPATH=src:. python -m benchmarks.loadgen --url http://host:8000 \
+        --requests 500 --concurrency 8 --slo-p99-ms 250 --json slo.json
+    PYTHONPATH=src:. python -m benchmarks.loadgen --nodes 2 --requests 400 \
+        --slo-p99-ms 500 --max-shed-rate 0 --json slo.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import queue
+import random
+import sys
+import threading
+import time
+
+MODEL = "OSS:120b"
+
+#: default domains for synthesized cells (kept small so warmup is cheap)
+DEFAULT_DOMAINS = ("tri2d", "gasket2d", "carpet2d", "pyramid3d")
+
+
+@dataclasses.dataclass
+class LoadSpec:
+    """One load run's shape.
+
+    ``mix`` weights are normalized; ops other than ``derive`` degrade to a
+    derive when their preconditions are missing (no warmed artifact key
+    yet).  ``rate`` paces arrivals open-loop (requests/second across all
+    workers, ``None`` = closed loop: every worker fires as fast as replies
+    come back).  ``burst_every``/``burst_size`` inject zero-gap bursts into
+    a paced schedule — the shape that exposes admission-control sheds."""
+
+    requests: int = 200
+    concurrency: int = 8
+    zipf_s: float = 1.1          # popularity skew (higher = hotter head)
+    cells: int = 12              # distinct (domain, model, stage) cells
+    domains: tuple = DEFAULT_DOMAINS
+    model: str = MODEL
+    stages: tuple = (100, 50)    # must be stages the mock bank carries
+    mix: dict = dataclasses.field(default_factory=lambda: {
+        "derive": 0.85, "evaluate": 0.05, "grid": 0.02, "artifact": 0.08})
+    rate: float | None = None    # req/s arrival pacing (None = closed loop)
+    burst_every: float = 0.0     # seconds between bursts (0 = no bursts)
+    burst_size: int = 0          # extra zero-gap requests per burst
+    eval_points: int = 4096      # n_points per evaluate op
+    trace_sample: float = 0.0    # fraction of derives sent with a trace ID
+    warmup: bool = True          # derive each cell once before measuring
+    timeout: float = 30.0
+    seed: int = 0
+
+
+def zipf_weights(n: int, s: float) -> list[float]:
+    """Normalized zipf(s) popularity over ranks 1..n."""
+    raw = [1.0 / (rank ** s) for rank in range(1, n + 1)]
+    total = sum(raw)
+    return [w / total for w in raw]
+
+
+def synth_cells(spec: LoadSpec) -> list[tuple[str, str, int]]:
+    """The distinct cells the trace draws from, hottest first."""
+    out = []
+    for i in range(spec.cells):
+        domain = spec.domains[i % len(spec.domains)]
+        stage = spec.stages[(i // len(spec.domains)) % len(spec.stages)]
+        out.append((domain, spec.model, stage))
+    return out
+
+
+def synth_trace(spec: LoadSpec) -> list[dict]:
+    """The replayable trace: one op dict per request, zipf-skewed cells,
+    mixed op types, deterministic under ``spec.seed``."""
+    rng = random.Random(spec.seed)
+    cells = synth_cells(spec)
+    weights = zipf_weights(len(cells), spec.zipf_s)
+    ops = list(spec.mix)
+    op_weights = [max(0.0, spec.mix[o]) for o in ops]
+    trace = []
+    for i in range(spec.requests):
+        cell = rng.choices(cells, weights=weights)[0]
+        op = rng.choices(ops, weights=op_weights)[0]
+        rec: dict = {"op": op, "cell": cell}
+        if op == "derive" and spec.trace_sample > 0 \
+                and rng.random() < spec.trace_sample:
+            rec["trace_id"] = "%032x" % rng.getrandbits(128)
+        trace.append(rec)
+    return trace
+
+
+def arrival_offsets(spec: LoadSpec) -> list[float] | None:
+    """Per-request start offsets (seconds from t0) for a paced run, with
+    optional zero-gap bursts; None for a closed-loop run."""
+    if spec.rate is None:
+        return None
+    offsets, t, since_burst = [], 0.0, 0.0
+    gap = 1.0 / spec.rate
+    i = 0
+    while i < spec.requests:
+        if spec.burst_every > 0 and spec.burst_size > 0 \
+                and since_burst >= spec.burst_every:
+            since_burst = 0.0
+            for _ in range(min(spec.burst_size, spec.requests - i)):
+                offsets.append(t)
+                i += 1
+            continue
+        offsets.append(t)
+        i += 1
+        t += gap
+        since_burst += gap
+    return offsets
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def _execute(client, op: dict, spec: LoadSpec, keys: dict) -> dict:
+    """Run one trace op; returns its latency record."""
+    from repro.serving.client import (
+        RemoteBusyError, RemoteServiceError, RemoteTimeoutError,
+    )
+
+    name, (domain, model, stage) = op["op"], op["cell"]
+    t0 = time.perf_counter()
+    rec = {"op": name, "cell": f"{domain}/{model}/{stage}", "ok": True,
+           "shed": False}
+    try:
+        if name == "artifact" and op["cell"] in keys:
+            client.fetch_artifact(keys[op["cell"]])
+        elif name == "evaluate":
+            client.evaluate(domain=domain, n_points=spec.eval_points)
+        elif name == "grid":
+            for _ in client.run_grid(domains=[domain], models=[model],
+                                     stages=[stage]):
+                pass
+        else:  # derive — also the degraded form of a keyless artifact op
+            res = client.derive(domain, model, stage,
+                                trace_id=op.get("trace_id"))
+            if res.cache_key:
+                keys[op["cell"]] = res.cache_key
+            if op.get("trace_id"):
+                rec["trace_id"] = op["trace_id"]
+    except (RemoteBusyError, RemoteTimeoutError) as e:
+        rec.update(ok=False, shed=True, error=type(e).__name__)
+    except RemoteServiceError as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    except Exception as e:  # noqa: BLE001 — a load run records, never dies
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+    rec["seconds"] = time.perf_counter() - t0
+    return rec
+
+
+def replay(urls: list[str], spec: LoadSpec,
+           trace: list[dict] | None = None) -> list[dict]:
+    """Replay a trace against the fleet from ``spec.concurrency`` worker
+    threads (requests round-robin across ``urls``); returns one latency
+    record per request."""
+    from repro.serving.client import RemoteMappingService
+
+    trace = trace if trace is not None else synth_trace(spec)
+    # retries=0: a shed must surface as a shed, not hide inside backoff
+    clients = [RemoteMappingService(u, timeout=spec.timeout, retries=0)
+               for u in urls]
+    keys: dict = {}
+    if spec.warmup:
+        for i, cell in enumerate(synth_cells(spec)):
+            res = clients[i % len(clients)].derive(*cell)
+            if res.cache_key:
+                keys[cell] = res.cache_key
+    offsets = arrival_offsets(spec)
+    work: "queue.Queue[tuple[int, dict]]" = queue.Queue()
+    for item in enumerate(trace):
+        work.put(item)
+    records: list[dict | None] = [None] * len(trace)
+    t_start = time.perf_counter()
+
+    def worker(wid: int) -> None:
+        client = clients[wid % len(clients)]
+        while True:
+            try:
+                i, op = work.get_nowait()
+            except queue.Empty:
+                return
+            if offsets is not None:
+                delay = offsets[i] - (time.perf_counter() - t_start)
+                if delay > 0:
+                    time.sleep(delay)
+            rec = _execute(client, op, spec, keys)
+            rec["node"] = client.url
+            records[i] = rec
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(spec.concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t_start
+    done = [r for r in records if r is not None]
+    for r in done:
+        r["wall_seconds"] = wall
+    for client in clients:
+        client.close()
+    return done
+
+
+def slo_report(records: list[dict], spec: LoadSpec) -> dict:
+    """Fold latency records into the SLO summary the CLI enforces."""
+    lat = sorted(r["seconds"] for r in records)
+    sheds = sum(1 for r in records if r.get("shed"))
+    errors = sum(1 for r in records if not r["ok"] and not r.get("shed"))
+    n = max(1, len(records))
+    wall = records[0]["wall_seconds"] if records else 0.0
+    per_op: dict = {}
+    for r in records:
+        bucket = per_op.setdefault(
+            r["op"], {"requests": 0, "errors": 0, "sheds": 0, "lat": []})
+        bucket["requests"] += 1
+        bucket["lat"].append(r["seconds"])
+        if r.get("shed"):
+            bucket["sheds"] += 1
+        elif not r["ok"]:
+            bucket["errors"] += 1
+    for bucket in per_op.values():
+        vals = sorted(bucket.pop("lat"))
+        bucket["p50_ms"] = _percentile(vals, 0.50) * 1e3
+        bucket["p95_ms"] = _percentile(vals, 0.95) * 1e3
+    return {
+        "requests": len(records),
+        "concurrency": spec.concurrency,
+        "zipf_s": spec.zipf_s,
+        "cells": spec.cells,
+        "wall_seconds": wall,
+        "throughput_rps": len(records) / wall if wall > 0 else 0.0,
+        "p50_ms": _percentile(lat, 0.50) * 1e3,
+        "p95_ms": _percentile(lat, 0.95) * 1e3,
+        "p99_ms": _percentile(lat, 0.99) * 1e3,
+        "max_ms": (lat[-1] * 1e3) if lat else 0.0,
+        "sheds": sheds,
+        "shed_rate": sheds / n,
+        "errors": errors,
+        "error_rate": errors / n,
+        "per_op": per_op,
+    }
+
+
+def run(urls: list[str], spec: LoadSpec | None = None,
+        ) -> tuple[list[dict], dict]:
+    """Synthesize + replay + summarize in one call (the programmatic and
+    benchmark-suite entry point)."""
+    spec = spec or LoadSpec()
+    records = replay(urls, spec)
+    return records, slo_report(records, spec)
+
+
+def check_slo(report: dict, slo_p99_ms: float | None,
+              max_shed_rate: float | None,
+              max_error_rate: float | None) -> list[str]:
+    """The violated bounds, as human-readable strings (empty = SLO met)."""
+    out = []
+    if slo_p99_ms is not None and report["p99_ms"] > slo_p99_ms:
+        out.append(f"p99 {report['p99_ms']:.1f}ms > SLO {slo_p99_ms:.1f}ms")
+    if max_shed_rate is not None and report["shed_rate"] > max_shed_rate:
+        out.append(f"shed rate {report['shed_rate']:.3f} > "
+                   f"{max_shed_rate:.3f} ({report['sheds']} sheds)")
+    if max_error_rate is not None and report["error_rate"] > max_error_rate:
+        out.append(f"error rate {report['error_rate']:.3f} > "
+                   f"{max_error_rate:.3f} ({report['errors']} errors)")
+    return out
+
+
+def _self_fleet(nodes: int):
+    """Boot an in-process fleet (async frontend, mock backend, private
+    store tree) for self-contained runs — the CI leg's fleet."""
+    import tempfile
+
+    from repro.core.store import build_store
+    from repro.serving import AsyncMappingHTTPServer, MappingService
+    from repro.serving.cluster import ClusterMembership
+
+    tmp = tempfile.TemporaryDirectory(prefix="loadgen-fleet-")
+    servers = []
+    seeds: list[str] = []
+    for i in range(nodes):
+        store = build_store(root=f"{tmp.name}/node{i}")
+        server = AsyncMappingHTTPServer(MappingService(store=store))
+        server.start()
+        if nodes > 1:
+            server.attach_cluster(ClusterMembership(
+                self_url=server.url, seeds=seeds or [server.url],
+                heartbeat_interval=0.2, sync_interval=0.5))
+        seeds.append(server.url)
+        servers.append(server)
+    if nodes > 1:
+        deadline = time.time() + 10.0
+        while time.time() < deadline:
+            if all(len(s.cluster.live_peers()) == nodes - 1
+                   for s in servers):
+                break
+            time.sleep(0.05)
+
+    def close() -> None:
+        for server in servers:
+            server.close()
+        tmp.cleanup()
+
+    return [s.url for s in servers], close
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    p.add_argument("--url", action="append", default=None,
+                   help="fleet node URL (repeatable; round-robin)")
+    p.add_argument("--nodes", type=int, default=0,
+                   help="boot an in-process N-node fleet instead of --url "
+                        "(async frontend, mock backend)")
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--concurrency", type=int, default=8)
+    p.add_argument("--zipf-s", type=float, default=1.1)
+    p.add_argument("--cells", type=int, default=12)
+    p.add_argument("--rate", type=float, default=None,
+                   help="paced arrival rate in req/s (default: closed loop)")
+    p.add_argument("--burst-every", type=float, default=0.0)
+    p.add_argument("--burst-size", type=int, default=0)
+    p.add_argument("--trace-sample", type=float, default=0.0,
+                   help="fraction of derives sent with an explicit "
+                        "X-Repro-Trace-Id")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--no-warmup", dest="warmup", action="store_false")
+    p.add_argument("--slo-p99-ms", type=float, default=None)
+    p.add_argument("--max-shed-rate", type=float, default=None)
+    p.add_argument("--max-error-rate", type=float, default=None)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write the SLO report (+ per-request records) here")
+    args = p.parse_args()
+
+    if bool(args.url) == bool(args.nodes):
+        p.error("exactly one of --url or --nodes is required")
+    close = None
+    if args.nodes:
+        urls, close = _self_fleet(args.nodes)
+    else:
+        urls = args.url
+    spec = LoadSpec(requests=args.requests, concurrency=args.concurrency,
+                    zipf_s=args.zipf_s, cells=args.cells, rate=args.rate,
+                    burst_every=args.burst_every, burst_size=args.burst_size,
+                    trace_sample=args.trace_sample, seed=args.seed,
+                    warmup=args.warmup)
+    try:
+        records, report = run(urls, spec)
+    finally:
+        if close is not None:
+            close()
+    report["urls"] = urls
+    print(json.dumps({k: v for k, v in report.items() if k != "per_op"},
+                     indent=1))
+    for op, stats in sorted(report["per_op"].items()):
+        print(f"  {op}: {stats}")
+    violations = check_slo(report, args.slo_p99_ms, args.max_shed_rate,
+                           args.max_error_rate)
+    report["slo_violations"] = violations
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"report": report, "records": records}, f, indent=1,
+                      default=str)
+        print(f"[loadgen] wrote {args.json}")
+    if violations:
+        print(f"[loadgen] SLO VIOLATED: {violations}")
+        sys.exit(1)
+    print("[loadgen] SLO met")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,8 @@ def main() -> None:
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
                    help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
-                        "|cluster|evaluate|concurrency")
+                        "|cluster|evaluate|concurrency|observability"
+                        "|loadgen")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
@@ -60,6 +61,8 @@ def main() -> None:
         "cluster": serving.cluster_suite,
         "evaluate": serving.evaluate_suite,
         "concurrency": serving.concurrency_suite,
+        "observability": serving.observability_suite,
+        "loadgen": serving.loadgen_suite,
     }
     report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
@@ -87,7 +90,9 @@ def main() -> None:
     if serving.LAST_METRICS and ("serving" in report["suites"]
                                  or "cluster" in report["suites"]
                                  or "evaluate" in report["suites"]
-                                 or "concurrency" in report["suites"]):
+                                 or "concurrency" in report["suites"]
+                                 or "observability" in report["suites"]
+                                 or "loadgen" in report["suites"]):
         report["serving"] = serving.LAST_METRICS
         # the serving suite runs against its own private store, invisible to
         # default_cache() — take its hit/miss deltas from the server's own

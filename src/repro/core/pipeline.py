@@ -36,6 +36,7 @@ from repro.core.artifact import MappingArtifact, cache_key, logic_for
 from repro.core.backends import LLMBackend, LLMResponse, build_prompt
 from repro.core.domains import DOMAINS, Domain
 from repro.core.store import ArtifactStore, default_store
+from repro.obs import trace as obs_trace
 
 _USE_DEFAULT_CACHE = object()  # sentinel: "resolve default_store() at call"
 
@@ -222,8 +223,12 @@ def prepare_request(
 
 def stage_inference(req: DerivationRequest) -> LLMResponse:
     """Phase 2 — Symbolic Inference over the prepared prompt."""
-    return req.backend.generate(
-        req.prompt, meta={"domain": req.domain.name, "stage": req.stage})
+    # the meta dict additionally snapshots the active request trace so a
+    # shared batcher thread can attribute its generate work (see obs.trace)
+    with obs_trace.span("inference", model=req.backend.name):
+        return req.backend.generate(
+            req.prompt, meta={"domain": req.domain.name, "stage": req.stage,
+                              **obs_trace.meta_context()})
 
 
 def stage_synthesis(resp: LLMResponse) -> synthesis.SynthesizedMap:
@@ -266,7 +271,8 @@ def run_stages(
         )
     if callable(gt):
         gt = gt()
-    rep, cls = stage_validation(req, synth, gt)
+    with obs_trace.span("validation", n_points=req.n_validate):
+        rep, cls = stage_validation(req, synth, gt)
     return DerivationResult(
         domain=req.domain.name, model=req.backend.name, stage=req.stage,
         response=resp, compiled=True, source=synth.source, report=rep,

@@ -46,6 +46,8 @@ import warnings
 from pathlib import Path
 from typing import Any, Callable, Iterable
 
+from repro.obs import trace as obs_trace
+
 SCHEMA_VERSION = 2
 _ENVELOPE_FIELDS = ("schema", "key", "checksum")
 
@@ -815,11 +817,21 @@ class PeerStore(ArtifactStore):
         return self.peers
 
     def load(self, key: str) -> dict[str, Any] | None:
+        with obs_trace.span("store_peer") as sp:
+            rec = self._load(key, sp)
+            sp["hit"] = rec is not None
+        return rec
+
+    def _load(self, key: str, sp: dict) -> dict[str, Any] | None:
         for peer in self.targets(key):
-            url = f"{peer}/v1/replicate/{key}"
+            req = urllib.request.Request(
+                f"{peer}/v1/replicate/{key}",
+                # carry the active trace across the pull so the sibling's
+                # replicate_pull span lands under the same ID
+                headers=obs_trace.wire_headers())
             try:
                 with urllib.request.urlopen(  # noqa: S310 — operator-set URL
-                        url, timeout=self.timeout) as resp:
+                        req, timeout=self.timeout) as resp:
                     rec = json.loads(resp.read())
             except urllib.error.HTTPError as e:
                 if e.code != 404:
@@ -838,6 +850,7 @@ class PeerStore(ArtifactStore):
                 self.errors += 1
                 continue
             self.hits += 1
+            sp["peer"] = peer
             return rec
         self.misses += 1
         return None
@@ -917,7 +930,9 @@ class TieredStore(ArtifactStore):
         """Memory -> disk only (the replication-pull surface: a peer's
         question must never trigger our own peer fetch)."""
         if self.memory is not None:
-            rec = self.memory.load(key)
+            with obs_trace.span("store_memory") as sp:
+                rec = self.memory.load(key)
+                sp["hit"] = rec is not None
             if rec is not None:
                 if self.disk is not None:
                     # keep the disk tier's eviction index truthful for
@@ -926,7 +941,9 @@ class TieredStore(ArtifactStore):
                     self.disk.note_access(key)
                 return rec
         if self.disk is not None:
-            rec = self.disk.load(key)
+            with obs_trace.span("store_disk") as sp:
+                rec = self.disk.load(key)
+                sp["hit"] = rec is not None
             if rec is not None:
                 if self.memory is not None:
                     self.memory.store(key, rec)

@@ -152,10 +152,12 @@ def serve_maps(args) -> None:
     if args.use_async:
         server = AsyncMappingHTTPServer(
             service, host=args.host, port=args.port,
-            max_pending=args.max_pending)
+            max_pending=args.max_pending,
+            observability=args.observability)
         server.start()  # bind + loop up before cluster membership probes
     else:
-        server = MappingHTTPServer(service, host=args.host, port=args.port)
+        server = MappingHTTPServer(service, host=args.host, port=args.port,
+                                   observability=args.observability)
     cluster = _cluster_from_args(args, server)
     store = service.store
     if store is None:
@@ -170,6 +172,9 @@ def serve_maps(args) -> None:
     mode = "async" if args.use_async else "threaded"
     print(f"mapping service on {server.url}  "
           f"(backend={args.backend}, frontend={mode}, store={desc})")
+    print(f"observability: tracing={'on' if args.observability else 'off'} "
+          f"(X-Repro-Trace-Id; GET /v1/trace/<id>), metrics=json+prometheus "
+          f"(GET /metrics?format=prometheus)")
     if args.use_async and args.backend == "engine":
         print(f"continuous batching: decode_slots={args.decode_slots} "
               f"admission_timeout={args.admission_timeout}s")
@@ -188,7 +193,7 @@ def serve_maps(args) -> None:
           "GET|DELETE /v1/artifact/<key>  "
           "POST /v1/grid  GET /v1/store/stats  GET /v1/cluster  "
           "GET /v1/replicate/manifest  GET|POST /v1/replicate/<key>  "
-          "GET /healthz  GET /metrics")
+          "GET /v1/trace/<id>  GET /v1/traces  GET /healthz  GET /metrics")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -263,6 +268,11 @@ def main() -> None:
                    help="seconds the batcher waits to fill a batch")
     p.add_argument("--max-pending", type=int, default=256,
                    help="admission queue depth (beyond this: HTTP 503)")
+    p.add_argument("--observability", default=True,
+                   action=argparse.BooleanOptionalAction,
+                   help="per-request tracing (X-Repro-Trace-Id propagation "
+                        "+ /v1/trace endpoints); --no-observability turns "
+                        "tracing off (metrics always stay on)")
     p.add_argument("--async", dest="use_async", default=True,
                    action=argparse.BooleanOptionalAction,
                    help="serve from the asyncio event-loop frontend with "

@@ -8,7 +8,10 @@ batching (``async_engine``: step-interleaved cohort scheduler for the
 engine backend), the consistent-hash sharded fleet layer (``cluster``:
 ring placement, membership heartbeats, anti-entropy repair), and the
 batched map *evaluation* hot path (``evaluate``: compiled-executable
-groups behind ``POST /v1/evaluate``).
+groups behind ``POST /v1/evaluate``).  Both frontends carry the
+observability plane (``repro.obs``): per-request traces
+(``X-Repro-Trace-Id`` -> ``GET /v1/trace/<id>``) and a metrics registry
+served as JSON and Prometheus text (``GET /metrics?format=prometheus``).
 
 ``EvaluationService`` is imported lazily (it pulls in jax + the kernels) —
 ``from repro.serving.evaluate import EvaluationService``."""

@@ -31,6 +31,7 @@ from __future__ import annotations
 import asyncio
 import collections
 import concurrent.futures
+import contextvars
 import json
 import socket
 import threading
@@ -42,10 +43,11 @@ from repro.core import pipeline
 from repro.core import store as store_mod
 from repro.core.backends import LLMBusyError
 from repro.core.domains import DOMAINS
+from repro.obs import Observability
+from repro.obs import trace as obs_trace
 from repro.serving.http import (
     FORWARDED_HEADER,
     MAX_BODY_BYTES,
-    _EndpointMetrics,
     collect_metrics,
     map_error,
 )
@@ -61,11 +63,13 @@ _SENTINEL = object()
 
 
 def _head(status: int, content_type: str, length: int | None,
-          close: bool) -> bytes:
+          close: bool, extra: dict | None = None) -> bytes:
     lines = [f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}",
              f"Content-Type: {content_type}"]
     if length is not None:
         lines.append(f"Content-Length: {length}")
+    if extra:
+        lines.extend(f"{name}: {value}" for name, value in extra.items())
     if close:
         lines.append("Connection: close")
     return ("\r\n".join(lines) + "\r\n\r\n").encode()
@@ -102,8 +106,10 @@ class _Conn:
         if close:
             self.keep_alive = False
         self.responded = True
+        # echo the active trace ID (set by _dispatch) back to the caller
+        extra = obs_trace.wire_headers() or None
         self.writer.write(
-            _head(status, content_type, len(body), close) + body)
+            _head(status, content_type, len(body), close, extra) + body)
         await self.writer.drain()
 
     async def send_json(self, status: int, payload: dict,
@@ -133,12 +139,14 @@ class AsyncMappingHTTPServer:
                  stream_buffer_bytes: int = 256 * 1024,
                  stall_threshold: float = 0.25,
                  wire_cache_entries: int = 1024,
-                 async_backends: list | None = None):
+                 async_backends: list | None = None,
+                 observability: bool = True):
         self.service = service
         self.cluster = None
         self.forwarded = 0
         self.forward_errors = 0
         self.forward_timeout = 30.0
+        self.obs = Observability(mode="async", enabled=observability)
         self.max_pending = max_pending
         self.idle_timeout = idle_timeout
         self.stream_buffer_bytes = stream_buffer_bytes
@@ -155,8 +163,6 @@ class AsyncMappingHTTPServer:
         self._wire_cache: "collections.OrderedDict[tuple, tuple[str, bytes]]" \
             = collections.OrderedDict()
         self._wire_cache_entries = wire_cache_entries
-        self._metrics: dict[str, _EndpointMetrics] = {}
-        self._metrics_mu = threading.Lock()
         self._evaluator = None
         self._evaluator_mu = threading.Lock()
         self._executor = concurrent.futures.ThreadPoolExecutor(
@@ -164,6 +170,7 @@ class AsyncMappingHTTPServer:
         self._sock = socket.create_server((host, port), reuse_port=False)
         self.host = host
         self.port = self._sock.getsockname()[1]
+        self.obs.node = self.url
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._started = threading.Event()
@@ -285,22 +292,19 @@ class AsyncMappingHTTPServer:
 
     # -- metrics -----------------------------------------------------------
     def observe(self, endpoint: str, seconds: float, ok: bool) -> None:
-        with self._metrics_mu:
-            em = self._metrics.get(endpoint)
-            if em is None:
-                em = self._metrics[endpoint] = _EndpointMetrics()
-            em.record(seconds, ok)
+        self.obs.observe(endpoint, seconds, ok)
 
     def metrics(self) -> dict:
-        with self._metrics_mu:
-            http = {name: em.as_dict() for name, em in self._metrics.items()}
         with self._evaluator_mu:
             evaluator = self._evaluator
         out = collect_metrics(
-            self.service, http, cluster=self.cluster,
+            self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
-            evaluator=evaluator)
-        out["aio"] = {
+            evaluator=evaluator, frontend=self.obs.frontend_dict())
+        # event-loop frontend counters ride inside the shared "frontend"
+        # section (parity with the threaded server's key set) and stay
+        # aliased at the legacy top-level "aio" key for existing consumers
+        out["frontend"]["aio"] = out["aio"] = {
             "fast_hits": self.fast_hits,
             "wire_hits": self.wire_hits,
             "offloaded": self.offloaded,
@@ -312,11 +316,19 @@ class AsyncMappingHTTPServer:
         }
         return out
 
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of the same numbers (see the threaded
+        server's ``metrics_prometheus``)."""
+        return self.obs.prometheus(self.metrics())
+
     # -- offload with admission control -------------------------------------
     async def _offload(self, fn, *args, admitted: bool = True):
         """Run blocking work on the worker pool.  ``admitted=True`` paths
         count against ``max_pending`` and shed with LLMBusyError → 503 when
-        the frontend is saturated (mirror of the batching queue's story)."""
+        the frontend is saturated (mirror of the batching queue's story).
+        The call runs under a copy of the event loop's context so the
+        active trace (a contextvar) survives the thread handoff —
+        ``run_in_executor`` alone would drop it."""
         if admitted:
             if self._pending >= self.max_pending:
                 self.shed += 1
@@ -325,9 +337,10 @@ class AsyncMappingHTTPServer:
                     f"requests in flight)")
             self._pending += 1
             self.offloaded += 1
+        ctx = contextvars.copy_context()
         try:
             return await asyncio.get_running_loop().run_in_executor(
-                self._executor, fn, *args)
+                self._executor, ctx.run, fn, *args)
         finally:
             if admitted:
                 self._pending -= 1
@@ -434,6 +447,11 @@ class AsyncMappingHTTPServer:
 
     async def _dispatch(self, conn: _Conn) -> None:
         endpoint, handler = self._route(conn)
+        # activate the request trace on this task's context: handlers (and
+        # context-copied offloads) record spans under it, send_bytes echoes
+        # the ID, end_request records the request-level span + deactivates
+        token = self.obs.begin_request(
+            conn.headers.get(obs_trace.TRACE_HEADER.lower()))
         t0 = time.monotonic()
         ok = True
         try:
@@ -452,15 +470,21 @@ class AsyncMappingHTTPServer:
             else:
                 conn.keep_alive = False
         finally:
-            self.observe(endpoint, time.monotonic() - t0, ok)
+            seconds = time.monotonic() - t0
+            self.observe(endpoint, seconds, ok)
+            self.obs.end_request(token, endpoint, seconds, ok)
 
     def _route(self, conn: _Conn):
         method, path = conn.method, conn.path
         if method == "GET":
             if path == "/healthz":
                 return "healthz", self._healthz
-            if path == "/metrics":
+            if path == "/metrics" or path.startswith("/metrics?"):
                 return "metrics", self._metrics_route
+            if path == "/v1/traces":
+                return "traces", self._traces_route
+            if path.startswith("/v1/trace/"):
+                return "trace", self._trace_route
             if path == "/v1/store/stats":
                 return "store_stats", self._store_stats
             if path == "/v1/cluster" or path.startswith("/v1/cluster?"):
@@ -498,6 +522,10 @@ class AsyncMappingHTTPServer:
             "peers": len(peers),
             "domains": len(DOMAINS),
             "loop": "asyncio",
+            "mode": self.obs.mode,
+            "uptime_seconds": self.obs.uptime_seconds(),
+            "started_unix": self.obs.started_unix,
+            "backend_names": sorted(self.service.backends()),
         }
         if self.cluster is not None:
             payload["cluster_nodes_up"] = len(self.cluster.live_peers()) + 1
@@ -511,7 +539,30 @@ class AsyncMappingHTTPServer:
         await conn.send_json(200, payload)
 
     async def _metrics_route(self, conn: _Conn) -> None:
+        from urllib.parse import parse_qs, urlsplit
+
+        fmt = parse_qs(urlsplit(conn.path).query).get("format", [""])[0]
+        if fmt == "prometheus":
+            text = await self._offload(self.metrics_prometheus,
+                                       admitted=False)
+            await conn.send_bytes(
+                200, text.encode(),
+                content_type="text/plain; version=0.0.4")
+            return
         await conn.send_json(200, self.metrics())
+
+    async def _traces_route(self, conn: _Conn) -> None:
+        await conn.send_json(200, self.obs.traces_payload())
+
+    async def _trace_route(self, conn: _Conn) -> None:
+        trace_id = conn.path[len("/v1/trace/"):]
+        payload = self.obs.trace_payload(trace_id)
+        if payload is None:
+            await conn.send_json(404, {
+                "error": f"no trace {trace_id!r} on this node",
+                "trace_id": trace_id})
+            return
+        await conn.send_json(200, payload)
 
     async def _store_stats(self, conn: _Conn) -> None:
         def build() -> dict:
@@ -711,10 +762,12 @@ class AsyncMappingHTTPServer:
                     f"{owner}/v1/derive", data=json.dumps(body).encode(),
                     method="POST",
                     headers={"Content-Type": "application/json",
-                             FORWARDED_HEADER: "1"})
+                             FORWARDED_HEADER: "1",
+                             **obs_trace.wire_headers()})
                 try:
-                    with urllib.request.urlopen(  # noqa: S310 — fleet URL
-                            req, timeout=self.forward_timeout) as resp:
+                    with obs_trace.span("forward", owner=owner), \
+                            urllib.request.urlopen(  # noqa: S310 — fleet URL
+                                req, timeout=self.forward_timeout) as resp:
                         return resp.status, resp.read()
                 except urllib.error.HTTPError as e:
                     return e.code, e.read()
@@ -804,10 +857,14 @@ class AsyncMappingHTTPServer:
         conn.writer.write(_head(200, "application/x-ndjson", None, True))
         loop = asyncio.get_running_loop()
         stalled = False
+        # one context snapshot for the whole stream: every generator step
+        # runs under the request's trace regardless of which pool thread
+        # picks it up
+        ctx = contextvars.copy_context()
         try:
             while True:
                 res = await loop.run_in_executor(
-                    self._executor, next, cells, _SENTINEL)
+                    self._executor, ctx.run, next, cells, _SENTINEL)
                 if res is _SENTINEL:
                     break
                 conn.writer.write((json.dumps(wire(res)) + "\n").encode())

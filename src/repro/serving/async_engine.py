@@ -40,6 +40,7 @@ from repro.core.backends import (
     LLMResponse,
     LLMTimeoutError,
 )
+from repro.obs import trace as obs_trace
 
 
 class CohortStepper(Protocol):
@@ -183,11 +184,12 @@ class _Req:
 
 
 class _Cohort:
-    __slots__ = ("reqs", "state")
+    __slots__ = ("reqs", "state", "t0")
 
     def __init__(self, reqs: list[_Req], state: object):
         self.reqs = reqs
         self.state = state
+        self.t0 = time.monotonic()
 
 
 class ContinuousBatcher:
@@ -282,12 +284,23 @@ class ContinuousBatcher:
                 return
             if self._cohorts:
                 self.stats.joined_inflight += len(admitted)
+        t_admit = time.monotonic()
         try:
             state = self.stepper.prefill([r.prompt for r in admitted])
         except BaseException as e:  # noqa: BLE001 — fan the error out
             for req in admitted:
                 req.future.set_exception(e)
             return
+        dt_prefill = time.monotonic() - t_admit
+        for req in admitted:
+            # the scheduler thread serves every request, so attribution goes
+            # through each request's meta-carried trace snapshot
+            obs_trace.record_for_meta(
+                req.meta, "cohort_join", t_admit - req.enqueued,
+                cohort=len(admitted))
+            obs_trace.record_for_meta(
+                req.meta, "engine_prefill", dt_prefill,
+                cohort=len(admitted))
         with self._mu:
             self._cohorts.append(_Cohort(admitted, state))
             self.stats.prefills += 1
@@ -330,7 +343,11 @@ class ContinuousBatcher:
                     for req in cohort.reqs:
                         req.future.set_exception(err)
                 else:
+                    decode_s = time.monotonic() - cohort.t0
+                    steps = getattr(cohort.state, "steps_done", 0)
                     for req, resp in zip(cohort.reqs, responses):
+                        obs_trace.record_for_meta(
+                            req.meta, "engine_decode", decode_s, steps=steps)
                         req.future.set_result(resp)
                     with self._mu:
                         self.stats.completed += len(cohort.reqs)

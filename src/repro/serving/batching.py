@@ -23,6 +23,7 @@ import threading
 import time
 
 from repro.core.backends import LLMBackend, LLMBusyError, LLMResponse
+from repro.obs import trace as obs_trace
 
 
 class AdmissionError(LLMBusyError):
@@ -105,10 +106,12 @@ class BatchingBackend:
         # poll-wait so a close() racing this admission can never strand us:
         # close() drains the queue with errors, and anything it missed is
         # caught by the stop-flag check here
-        while not item.event.wait(0.1):
-            if self._stop.is_set() and not item.event.is_set():
-                raise AdmissionError(
-                    f"batching queue for {self.name!r} closed while waiting")
+        with obs_trace.span("batch_wait", model=self.name):
+            while not item.event.wait(0.1):
+                if self._stop.is_set() and not item.event.is_set():
+                    raise AdmissionError(
+                        f"batching queue for {self.name!r} closed "
+                        "while waiting")
         if item.error is not None:
             raise item.error
         return item.response  # type: ignore[return-value]
@@ -163,9 +166,16 @@ class BatchingBackend:
                 if len(batch) > 1:
                     self.stats.batched_requests += len(batch)
             try:
+                t0 = time.monotonic()
                 responses = self._run(batch)
+                dt = time.monotonic() - t0
                 for item, resp in zip(batch, responses):
                     item.response = resp
+                    # the drain thread serves many requests, so attribution
+                    # goes through each item's meta-carried trace snapshot
+                    obs_trace.record_for_meta(
+                        item.meta, "engine_generate", dt, batch=len(batch),
+                        model=self.name)
             except BaseException as e:  # noqa: BLE001 — fan the error out
                 for item in batch:
                     item.error = e

@@ -58,6 +58,7 @@ from repro.core.artifact import MappingArtifact
 from repro.core.backends import LLMBusyError, LLMTimeoutError
 from repro.core.domains import Domain
 from repro.core.store import valid_key
+from repro.obs import trace as obs_trace
 from repro.serving.map_service import MappingService
 
 #: 503 = admission shed (server asked us to back off); 504 = generation
@@ -276,14 +277,20 @@ class RemoteMappingService:
         return _Response(self, netloc, conn, resp)
 
     def _open(self, path: str, body: dict | None = None,
-              method: str | None = None, base: str | None = None) -> _Response:
+              method: str | None = None, base: str | None = None,
+              headers: dict | None = None) -> _Response:
         data = json.dumps(body).encode() if body is not None else None
-        headers = {"Content-Type": "application/json"} if data else {}
+        all_headers = {"Content-Type": "application/json"} if data else {}
+        # propagate the caller's active trace (no-op outside one); an
+        # explicit per-call header (derive's trace_id) wins over it
+        all_headers.update(obs_trace.wire_headers())
+        if headers:
+            all_headers.update(headers)
         if not self.keep_alive:
-            headers["Connection"] = "close"
+            all_headers["Connection"] = "close"
         method = method or ("POST" if data is not None else "GET")
         resp = self._request_once(base or self.url, method, path, data,
-                                  headers)
+                                  all_headers)
         if resp.status >= 400:
             raw = resp.read()
             resp.close()
@@ -297,7 +304,8 @@ class RemoteMappingService:
 
     def _attempts(self, path: str, body: dict | None,
                   method: str | None = None,
-                  base: str | None = None) -> _Response:
+                  base: str | None = None,
+                  headers: dict | None = None) -> _Response:
         """Open a response, retrying transport/503 failures with backoff;
         raises the terminal error when attempts are exhausted."""
         last: Exception | None = None
@@ -306,7 +314,8 @@ class RemoteMappingService:
                 time.sleep(self.backoff * (2 ** (attempt - 1)))
                 self.stats.retries += 1
             try:
-                return self._open(path, body, method, base=base)
+                return self._open(path, body, method, base=base,
+                                  headers=headers)
             except _StatusError as e:
                 if e.status in _RETRYABLE_STATUS:
                     last = e
@@ -320,8 +329,10 @@ class RemoteMappingService:
         raise _exhausted_error(path, self.retries + 1, status, last) from last
 
     def _call_json(self, path: str, body: dict | None = None,
-                   method: str | None = None, base: str | None = None) -> dict:
-        with self._attempts(path, body, method, base=base) as resp:
+                   method: str | None = None, base: str | None = None,
+                   headers: dict | None = None) -> dict:
+        with self._attempts(path, body, method, base=base,
+                            headers=headers) as resp:
             payload = json.loads(resp.read())
         self.stats.remote_requests += 1
         return payload
@@ -376,15 +387,17 @@ class RemoteMappingService:
         return owners[0]
 
     def _call_routed(self, path: str, body: dict | None, key: str | None,
-                     method: str | None = None) -> dict:
+                     method: str | None = None,
+                     headers: dict | None = None) -> dict:
         """``_call_json`` addressed to ``key``'s ring owner when one is
         known, degrading to the home URL when the owner is unreachable —
         a definite answer from the owner (400/404/500) stands."""
         owner = self._owner_url(key)
         if owner is None:
-            return self._call_json(path, body, method)
+            return self._call_json(path, body, method, headers=headers)
         try:
-            payload = self._call_json(path, body, method, base=owner)
+            payload = self._call_json(path, body, method, base=owner,
+                                      headers=headers)
             self.stats.routed += 1
             return payload
         except RemoteServiceError as e:
@@ -392,7 +405,7 @@ class RemoteMappingService:
                 raise
             self.stats.reroutes += 1
             self._invalidate_ring()  # the view that routed us is stale
-            return self._call_json(path, body, method)
+            return self._call_json(path, body, method, headers=headers)
 
     # -- fallback ----------------------------------------------------------
     def _local(self) -> MappingService | None:
@@ -430,15 +443,16 @@ class RemoteMappingService:
                 "hex characters", status=400)
 
     # -- MappingService surface --------------------------------------------
-    def derive(self, domain: str | Domain, model: str,
-               stage: int = 100) -> pipeline.DerivationResult:
+    def derive(self, domain: str | Domain, model: str, stage: int = 100,
+               trace_id: str | None = None) -> pipeline.DerivationResult:
         name = domain.name if isinstance(domain, Domain) else domain
         cell = (name, model, stage)
+        headers = {obs_trace.TRACE_HEADER: trace_id} if trace_id else None
         try:
             payload = self._call_routed(
                 "/v1/derive", {"domain": name, "model": model,
                                "stage": stage},
-                key=self._cell_keys.get(cell))
+                key=self._cell_keys.get(cell), headers=headers)
         except RemoteServiceError as e:
             local = self._local()
             if local is None or not _falls_back(e):
@@ -651,3 +665,20 @@ class RemoteMappingService:
     def metrics(self) -> dict:
         """The server's /metrics payload (ServiceStats + latency + batching)."""
         return self._call_json("/metrics")
+
+    def metrics_prometheus(self) -> str:
+        """GET /metrics?format=prometheus: the text exposition."""
+        with self._attempts("/metrics?format=prometheus", None) as resp:
+            text = resp.read().decode()
+        self.stats.remote_requests += 1
+        return text
+
+    def trace(self, trace_id: str, base: str | None = None) -> dict:
+        """GET /v1/trace/<id>: one node's span shard of a request trace.
+        ``base`` asks a specific fleet node (each node holds only the spans
+        it executed); default is the home URL."""
+        return self._call_json(f"/v1/trace/{trace_id}", base=base)
+
+    def traces(self, base: str | None = None) -> dict:
+        """GET /v1/traces: recent trace IDs + ring-buffer stats."""
+        return self._call_json("/v1/traces", base=base)

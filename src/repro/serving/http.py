@@ -29,10 +29,13 @@ sharing across machines means a network surface.  This module wraps a
                                 triggers our own peer fetch)
     POST   /v1/replicate/<key>  replication push: store a record published
                                 by a sibling server into the local tiers
-    GET    /healthz             liveness probe
+    GET    /healthz             liveness probe (+ uptime, serving mode)
     GET    /metrics             ServiceStats + per-endpoint latency
                                 percentiles + batching/admission counters +
                                 per-tier store counters + cluster state
+                                (?format=prometheus -> text exposition)
+    GET    /v1/trace/<id>       this node's span shard of one request trace
+    GET    /v1/traces           recent trace IDs + ring-buffer stats
 
 Every thread the server spawns funnels into the *same* service instance, so
 the coalescing table and artifact-store file lock built in PR 2 are exactly
@@ -60,7 +63,6 @@ repairs owned-but-missing records through the manifest endpoint.
 """
 from __future__ import annotations
 
-import collections
 import json
 import socket
 import threading
@@ -78,6 +80,8 @@ from repro.core.backends import (
     LLMUnavailableError,
 )
 from repro.core.domains import DOMAINS
+from repro.obs import Observability
+from repro.obs import trace as obs_trace
 from repro.serving.map_service import MappingService
 
 MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
@@ -111,50 +115,23 @@ def map_error(e: BaseException) -> tuple[int, dict]:
     return 500, {"error": f"{type(e).__name__}: {e}"}
 
 
-def _percentile(sorted_vals: list[float], q: float) -> float:
-    """Nearest-rank percentile over an already-sorted sample (0 if empty)."""
-    if not sorted_vals:
-        return 0.0
-    idx = min(len(sorted_vals) - 1, max(0, int(q * (len(sorted_vals) - 1))))
-    return sorted_vals[idx]
-
-
-class _EndpointMetrics:
-    """Per-endpoint counters + a bounded latency sample (seconds)."""
-
-    def __init__(self, window: int = 2048):
-        self.requests = 0
-        self.errors = 0
-        self.latencies: collections.deque[float] = collections.deque(
-            maxlen=window)
-
-    def record(self, seconds: float, ok: bool) -> None:
-        self.requests += 1
-        if not ok:
-            self.errors += 1
-        self.latencies.append(seconds)
-
-    def as_dict(self) -> dict:
-        sample = sorted(self.latencies)
-        return {
-            "requests": self.requests,
-            "errors": self.errors,
-            "p50_ms": _percentile(sample, 0.50) * 1e3,
-            "p95_ms": _percentile(sample, 0.95) * 1e3,
-        }
-
-
 def collect_metrics(service: MappingService, http: dict, cluster=None,
                     forwarded: int = 0, forward_errors: int = 0,
-                    evaluator=None) -> dict:
+                    evaluator=None, frontend: dict | None = None) -> dict:
     """The shared /metrics payload shape — one builder for the threaded and
-    asyncio frontends so scrapers see identical keys from either."""
+    asyncio frontends so scrapers see identical keys from either.  The
+    per-endpoint ``http`` section comes from the observability plane's
+    bounded histograms (``repro.obs``); ``frontend`` is the mode/uptime/
+    trace-buffer section both frontends emit with one key set (the metrics
+    parity contract)."""
     out = {
         "service": service.stats_snapshot().as_dict(),
         "inflight": service.inflight_count(),
         "http": http,
         "batching": {},
     }
+    if frontend is not None:
+        out["frontend"] = frontend
     for model, backend in service.backends().items():
         # duck-typed: BatchingBackend.BatchStats and the continuous
         # batcher's ContinuousStats both publish as_dict()
@@ -188,7 +165,7 @@ class MappingHTTPServer:
     the listener down and joins it.  Usable as a context manager."""
 
     def __init__(self, service: MappingService, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, observability: bool = True):
         self.service = service
         self.cluster = None  # ClusterMembership once attach_cluster() ran
         self.forwarded = 0          # derives proxied to their ring owner
@@ -197,8 +174,7 @@ class MappingHTTPServer:
         # pin forwarding threads past the point the caller has given up —
         # the forward degrades to local derivation instead
         self.forward_timeout = 30.0
-        self._metrics: dict[str, _EndpointMetrics] = {}
-        self._metrics_mu = threading.Lock()
+        self.obs = Observability(mode="threaded", enabled=observability)
         self._evaluator = None       # EvaluationService, built on first use
         self._evaluator_mu = threading.Lock()
         self._conn_sockets: set = set()  # live keep-alive connections
@@ -208,6 +184,7 @@ class MappingHTTPServer:
         self.httpd.daemon_threads = True
         self.host = host
         self.port = self.httpd.server_address[1]
+        self.obs.node = self.url
         self._thread: threading.Thread | None = None
 
     @property
@@ -291,23 +268,23 @@ class MappingHTTPServer:
 
     # -- metrics -----------------------------------------------------------
     def observe(self, endpoint: str, seconds: float, ok: bool) -> None:
-        with self._metrics_mu:
-            em = self._metrics.get(endpoint)
-            if em is None:
-                em = self._metrics[endpoint] = _EndpointMetrics()
-            em.record(seconds, ok)
+        self.obs.observe(endpoint, seconds, ok)
 
     def metrics(self) -> dict:
         """The /metrics payload: one shared ServiceStats view + HTTP-layer
         latency percentiles + batching queues + per-tier store counters."""
-        with self._metrics_mu:
-            http = {name: em.as_dict() for name, em in self._metrics.items()}
         with self._evaluator_mu:
             evaluator = self._evaluator
         return collect_metrics(
-            self.service, http, cluster=self.cluster,
+            self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
-            evaluator=evaluator)
+            evaluator=evaluator, frontend=self.obs.frontend_dict())
+
+    def metrics_prometheus(self) -> str:
+        """The same numbers as Prometheus text exposition: registered
+        instruments (latency histograms) + every numeric leaf of the JSON
+        payload flattened to ``repro_*`` gauges."""
+        return self.obs.prometheus(self.metrics())
 
 
 def _make_handler(server: MappingHTTPServer):
@@ -345,9 +322,18 @@ def _make_handler(server: MappingHTTPServer):
             # disk tier would stringify (e.g. a Path) serves identically
             # from either tier instead of 500ing from the hot one
             body = json.dumps(payload, default=str).encode()
+            self._send_body(status, body, "application/json")
+
+        def _send_body(self, status: int, body: bytes,
+                       content_type: str) -> None:
             self.send_response(status)
-            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Type", content_type)
             self.send_header("Content-Length", str(len(body)))
+            trace_id = obs_trace.current_trace_id()
+            if trace_id is not None:
+                # echo the request's trace ID so callers learn the ID the
+                # ingress node minted for them
+                self.send_header(obs_trace.TRACE_HEADER, trace_id)
             if status >= 400 and self._request_body_len() > 0:
                 # an error may have fired before the request body was read
                 # (oversized body, unknown route): close-delimit so the
@@ -387,6 +373,8 @@ def _make_handler(server: MappingHTTPServer):
         def _timed(self, endpoint: str, fn) -> None:
             t0 = time.monotonic()
             ok = True
+            token = server.obs.begin_request(
+                self.headers.get(obs_trace.TRACE_HEADER))
             try:
                 fn()
             except (BrokenPipeError, ConnectionResetError):
@@ -396,14 +384,21 @@ def _make_handler(server: MappingHTTPServer):
                 status, payload = map_error(e)
                 self._send_json(status, payload)
             finally:
-                server.observe(endpoint, time.monotonic() - t0, ok)
+                seconds = time.monotonic() - t0
+                server.observe(endpoint, seconds, ok)
+                server.obs.end_request(token, endpoint, seconds, ok)
 
         # -- endpoints -----------------------------------------------------
         def do_GET(self) -> None:  # noqa: N802 (http.server API)
             if self.path == "/healthz":
                 self._timed("healthz", self._healthz)
-            elif self.path == "/metrics":
+            elif self.path == "/metrics" \
+                    or self.path.startswith("/metrics?"):
                 self._timed("metrics", self._metrics)
+            elif self.path == "/v1/traces":
+                self._timed("traces", self._traces)
+            elif self.path.startswith("/v1/trace/"):
+                self._timed("trace", self._trace)
             elif self.path == "/v1/store/stats":
                 self._timed("store_stats", self._store_stats)
             elif self.path == "/v1/cluster" \
@@ -444,6 +439,10 @@ def _make_handler(server: MappingHTTPServer):
                 "store": store is not None,
                 "peers": len(peers),
                 "domains": len(DOMAINS),
+                "mode": server.obs.mode,
+                "uptime_seconds": server.obs.uptime_seconds(),
+                "started_unix": server.obs.started_unix,
+                "backend_names": sorted(server.service.backends()),
             }
             if server.cluster is not None:
                 payload["cluster_nodes_up"] = \
@@ -451,7 +450,25 @@ def _make_handler(server: MappingHTTPServer):
             self._send_json(200, payload)
 
         def _metrics(self) -> None:
+            query = parse_qs(urlsplit(self.path).query)
+            if query.get("format", [""])[0] == "prometheus":
+                self._send_body(200, server.metrics_prometheus().encode(),
+                                "text/plain; version=0.0.4")
+                return
             self._send_json(200, server.metrics())
+
+        def _trace(self) -> None:
+            trace_id = self.path[len("/v1/trace/"):]
+            payload = server.obs.trace_payload(trace_id)
+            if payload is None:
+                self._send_json(404, {"error": f"no trace {trace_id!r} on "
+                                               "this node",
+                                      "trace_id": trace_id})
+                return
+            self._send_json(200, payload)
+
+        def _traces(self) -> None:
+            self._send_json(200, server.obs.traces_payload())
 
         def _store_stats(self) -> None:
             store = server.service.store
@@ -530,10 +547,14 @@ def _make_handler(server: MappingHTTPServer):
                     f"{owner}/v1/derive", data=json.dumps(body).encode(),
                     method="POST",
                     headers={"Content-Type": "application/json",
-                             FORWARDED_HEADER: "1"})
+                             FORWARDED_HEADER: "1",
+                             # the hop carries the trace ID, so the owner
+                             # records its spans under the same trace
+                             **obs_trace.wire_headers()})
                 try:
-                    with urllib.request.urlopen(  # noqa: S310 — fleet URL
-                            req, timeout=server.forward_timeout) as resp:
+                    with obs_trace.span("forward", owner=owner), \
+                            urllib.request.urlopen(  # noqa: S310 — fleet URL
+                                req, timeout=server.forward_timeout) as resp:
                         payload = resp.read()
                         status = resp.status
                 except urllib.error.HTTPError as e:
@@ -545,11 +566,7 @@ def _make_handler(server: MappingHTTPServer):
                     server.forward_errors += 1
                     continue  # next replica, then local degradation
                 server.forwarded += 1
-                self.send_response(status)
-                self.send_header("Content-Type", "application/json")
-                self.send_header("Content-Length", str(len(payload)))
-                self.end_headers()
-                self.wfile.write(payload)
+                self._send_body(status, payload, "application/json")
                 return True
             return False
 

@@ -45,6 +45,7 @@ from repro.core.domains import DOMAINS, Domain
 from repro.core.store import (
     ArtifactStore, as_tiered, default_store, finalize_record,
 )
+from repro.obs import trace as obs_trace
 
 _USE_DEFAULT_CACHE = object()
 
@@ -258,7 +259,8 @@ class MappingService:
             if leader:
                 fl = self._inflight[req.key] = _InFlight()
         if not leader:
-            fl.event.wait()
+            with obs_trace.span("coalesced_wait"):
+                fl.event.wait()
             with self._mu:
                 self.stats.coalesced += 1
             if fl.error is not None:
