@@ -9,7 +9,10 @@ worker pool.  Every request yields a latency record; the run folds them
 into an SLO report (p50/p95/p99, shed rate, error rate, per-op breakdown)
 that the CLI can *enforce*: a violated ``--slo-p99-ms`` / ``--max-shed-rate``
 / ``--max-error-rate`` bound exits non-zero, which is what makes the CI
-loadgen leg a regression gate rather than a dashboard.
+loadgen leg a regression gate rather than a dashboard.  ``--ramp`` steps
+the offered rate up until admission control sheds and reports the
+goodput-vs-offered-load knee, bounding the p99 of *accepted* requests
+(overload must shed, not stretch the latency of what it accepts).
 
 Programmatic:
 
@@ -276,6 +279,56 @@ def run(urls: list[str], spec: LoadSpec | None = None,
     return records, slo_report(records, spec)
 
 
+def ramp(urls: list[str], spec: LoadSpec | None = None,
+         start_rate: float = 50.0, step_factor: float = 2.0,
+         max_steps: int = 6, runner=None) -> dict:
+    """Offered-load ramp: replay the trace at geometrically increasing
+    paced rates until admission control starts shedding (or ``max_steps``
+    runs out), then report the goodput-vs-offered-load knee — the highest
+    offered rate the fleet absorbed shed-free — alongside the p99 of
+    *accepted* requests at every step.  The point of the assertion pair:
+    past saturation a healthy fleet sheds early (503) instead of
+    stretching the latency of the requests it does accept, so
+    ``accepted_p99_ms`` must stay bounded even on the shedding step.
+
+    ``runner(urls, spec) -> (records, report)`` is injectable for tests;
+    it defaults to :func:`run`."""
+    spec = spec or LoadSpec()
+    runner = runner or run
+    steps: list[dict] = []
+    rate = float(start_rate)
+    for _ in range(max(1, max_steps)):
+        step_spec = dataclasses.replace(
+            spec, rate=rate, warmup=spec.warmup and not steps)
+        records, report = runner(urls, step_spec)
+        accepted = sorted(r["seconds"] for r in records
+                          if r["ok"] and not r.get("shed"))
+        wall = report["wall_seconds"] or 1e-9
+        steps.append({
+            "offered_rps": rate,
+            "achieved_rps": report["throughput_rps"],
+            "goodput_rps": len(accepted) / wall,
+            "accepted": len(accepted),
+            "sheds": report["sheds"],
+            "shed_rate": report["shed_rate"],
+            "errors": report["errors"],
+            "accepted_p99_ms": _percentile(accepted, 0.99) * 1e3,
+        })
+        if report["sheds"] > 0:
+            break  # found the shed onset: the previous step is the knee
+        rate *= step_factor
+    absorbed = [s for s in steps if s["sheds"] == 0]
+    knee = absorbed[-1] if absorbed else None
+    return {
+        "mode": "ramp",
+        "steps": steps,
+        "saturated": steps[-1]["sheds"] > 0,
+        "knee_offered_rps": knee["offered_rps"] if knee else 0.0,
+        "knee_goodput_rps": knee["goodput_rps"] if knee else 0.0,
+        "accepted_p99_ms": max(s["accepted_p99_ms"] for s in steps),
+    }
+
+
 def check_slo(report: dict, slo_p99_ms: float | None,
               max_shed_rate: float | None,
               max_error_rate: float | None) -> list[str]:
@@ -342,7 +395,17 @@ def main() -> None:
     p.add_argument("--zipf-s", type=float, default=1.1)
     p.add_argument("--cells", type=int, default=12)
     p.add_argument("--rate", type=float, default=None,
-                   help="paced arrival rate in req/s (default: closed loop)")
+                   help="paced arrival rate in req/s (default: closed loop; "
+                        "with --ramp: the starting offered rate)")
+    p.add_argument("--ramp", action="store_true",
+                   help="step the offered rate up (x --ramp-step each run) "
+                        "until admission control sheds, then report the "
+                        "goodput-vs-offered-load knee; --slo-p99-ms bounds "
+                        "the p99 of ACCEPTED requests across every step")
+    p.add_argument("--ramp-step", type=float, default=2.0,
+                   help="multiplicative rate step between ramp runs")
+    p.add_argument("--ramp-max-steps", type=int, default=6,
+                   help="give up ramping after this many runs without a shed")
     p.add_argument("--burst-every", type=float, default=0.0)
     p.add_argument("--burst-size", type=int, default=0)
     p.add_argument("--trace-sample", type=float, default=0.0,
@@ -370,17 +433,41 @@ def main() -> None:
                     trace_sample=args.trace_sample, seed=args.seed,
                     warmup=args.warmup)
     try:
-        records, report = run(urls, spec)
+        if args.ramp:
+            records = []
+            report = ramp(urls, spec, start_rate=args.rate or 50.0,
+                          step_factor=args.ramp_step,
+                          max_steps=args.ramp_max_steps)
+        else:
+            records, report = run(urls, spec)
     finally:
         if close is not None:
             close()
     report["urls"] = urls
-    print(json.dumps({k: v for k, v in report.items() if k != "per_op"},
-                     indent=1))
-    for op, stats in sorted(report["per_op"].items()):
-        print(f"  {op}: {stats}")
-    violations = check_slo(report, args.slo_p99_ms, args.max_shed_rate,
-                           args.max_error_rate)
+    if args.ramp:
+        print(json.dumps({k: v for k, v in report.items() if k != "steps"},
+                         indent=1))
+        for step in report["steps"]:
+            print(f"  offered={step['offered_rps']:.1f}rps "
+                  f"goodput={step['goodput_rps']:.1f}rps "
+                  f"sheds={step['sheds']} "
+                  f"accepted_p99={step['accepted_p99_ms']:.1f}ms")
+        violations = []
+        if args.slo_p99_ms is not None \
+                and report["accepted_p99_ms"] > args.slo_p99_ms:
+            violations.append(
+                f"accepted p99 {report['accepted_p99_ms']:.1f}ms > "
+                f"SLO {args.slo_p99_ms:.1f}ms")
+        if not report["saturated"]:
+            print("[loadgen] ramp never shed — raise --ramp-max-steps or "
+                  "the starting --rate to find the knee")
+    else:
+        print(json.dumps({k: v for k, v in report.items() if k != "per_op"},
+                         indent=1))
+        for op, stats in sorted(report["per_op"].items()):
+            print(f"  {op}: {stats}")
+        violations = check_slo(report, args.slo_p99_ms, args.max_shed_rate,
+                               args.max_error_rate)
     report["slo_violations"] = violations
     if args.json:
         with open(args.json, "w") as f:

@@ -32,8 +32,8 @@ def main() -> None:
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
                    help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
-                        "|cluster|evaluate|concurrency|observability"
-                        "|loadgen")
+                        "|cluster|routing|evaluate|concurrency"
+                        "|observability|loadgen")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
@@ -59,6 +59,7 @@ def main() -> None:
         "msimplex": msimplex_scaling.run,
         "serving": serving.run,
         "cluster": serving.cluster_suite,
+        "routing": serving.routing_suite,
         "evaluate": serving.evaluate_suite,
         "concurrency": serving.concurrency_suite,
         "observability": serving.observability_suite,
@@ -89,6 +90,7 @@ def main() -> None:
         }
     if serving.LAST_METRICS and ("serving" in report["suites"]
                                  or "cluster" in report["suites"]
+                                 or "routing" in report["suites"]
                                  or "evaluate" in report["suites"]
                                  or "concurrency" in report["suites"]
                                  or "observability" in report["suites"]

@@ -48,6 +48,23 @@ added across PR 1-7 head to head:
     acceptance bar is the async frontend sustaining the top connection
     count at >= 2x the threaded hot-path throughput.
 
+The routing sub-suite (``--only routing``) measures the PR 9 load-aware
+replica scheduler against the static ring-order baseline:
+
+  * loaded vs static forwarding with one slowed replica — three
+    storeful ring nodes plus a store-less routing edge; the *primary*
+    owner of the hot cell sleeps ``serve_delay`` per derive, and 64
+    keep-alive connections hammer the cell through the edge so every
+    request pays the server-side routing hop (the edge can never serve
+    from residency).  Static policy walks owners in ring order (always
+    lands on the slow primary); the loaded policy's EWMA-latency +
+    queue-depth selector shifts to the healthy replica after the first
+    probes.  Acceptance: loaded sustains >= 2x the static hot-derive
+    throughput;
+  * ring vs rendezvous placement balance — primary-ownership share over
+    a fixed keyset on a 5-node fleet for both placements (max/ideal and
+    min/ideal recorded for each; a number, not an assertion).
+
 The observability sub-suite (``--only observability``) measures what the
 PR 8 tracing plane costs on the async hot path: hot-derive p50 with
 request tracing enabled vs disabled (metrics stay on in both — only span
@@ -327,6 +344,159 @@ def cluster_suite(n_hot: int = 60) -> dict:
           f"{cluster['owner_routed_p50_us']:.0f}us vs forwarded "
           f"{cluster['forwarded_p50_us']:.0f}us)")
     return cluster
+
+
+def _hammer_routed(entry, cell: tuple, n_conns: int,
+                   per_conn: int) -> dict:
+    """Like ``_hammer``, but every request forgets the client-side cell
+    key first, so it lands on the non-owner entry node and pays the
+    server-side hop through ``entry.router`` (a ring-aware client would
+    otherwise learn the key and self-route straight to the owners)."""
+    lat: list[float] = []
+    mu = threading.Lock()
+    gate = threading.Barrier(n_conns + 1)
+
+    def worker():
+        c = RemoteMappingService(entry.url)
+        c.derive(*cell)  # opens + warms this thread's connection
+        gate.wait()
+        times = []
+        for _ in range(per_conn):
+            c._cell_keys.pop(cell, None)
+            t0 = time.perf_counter()
+            assert c.derive(*cell).cache_hit
+            times.append(time.perf_counter() - t0)
+        with mu:
+            lat.extend(times)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_conns)]
+    for t in threads:
+        t.start()
+    gate.wait()  # every connection is open before the clock starts
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    lat.sort()
+    return {
+        "connections": n_conns,
+        "requests": n_conns * per_conn,
+        "rps": n_conns * per_conn / dt,
+        "p50_us": lat[len(lat) // 2] * 1e6,
+        "p95_us": lat[int(len(lat) * 0.95)] * 1e6,
+    }
+
+
+def routing_suite(n_conns: int = 64, per_conn: int = 6,
+                  serve_delay: float = 1.5) -> dict:
+    """Load-aware ("loaded") vs static ring-order replica selection with
+    one artificially slowed replica, plus ring-vs-rendezvous placement
+    balance.  Acceptance: loaded sustains >= 2x the static hot-derive
+    throughput at ``n_conns`` keep-alive connections."""
+    header("serving: routing (load-aware replica selection, placement)")
+    from repro.serving.cluster import (ClusterMembership, HashRing,
+                                       RendezvousHash)
+    from repro.serving.router import RequestRouter
+
+    kw = dict(n_validate=20_000, sample_every=10)
+    root = tempfile.mkdtemp(prefix="bench_routing_")
+    servers: list = []
+    seeds: list = []
+    for i in range(4):
+        # the 4th node is a store-less routing edge: it can never satisfy
+        # the hot cell from residency, so every request it receives pays
+        # the router dispatch + forward hop the suite is measuring
+        store = build_store(root=f"{root}/n{i}") if i < 3 else None
+        node = MappingHTTPServer(
+            MappingService(store=store, **kw)).start()
+        node.attach_cluster(ClusterMembership(
+            node.url, seeds=seeds, replicas=2, vnodes=64,
+            heartbeat_interval=0.1, down_after=2.0, sync_interval=5.0,
+            weight=1.0 if i < 3 else 1e-9))
+        seeds = seeds or [node.url]
+        servers.append(node)
+    deadline = time.perf_counter() + 20
+    while any(len(s.cluster.ring.nodes) < 4 for s in servers):
+        assert time.perf_counter() < deadline, "ring never converged"
+        time.sleep(0.05)
+
+    results: dict = {"connections": n_conns,
+                     "serve_delay_s": serve_delay}
+    try:
+        entry = servers[3]
+        # the edge holds one token-weight vnode, so a given cell has a
+        # tiny chance of hashing to it — scan a few cells for one whose
+        # owners are both storeful nodes (ports randomize the hashes, so
+        # this must be computed per run, not hardcoded)
+        cell = next(
+            c for c in [(d, MODEL, s) for s in (100, 50, 20)
+                        for d in ("tri2d", "gasket2d", "carpet2d")]
+            if entry.url not in servers[0].cluster.owners(
+                servers[0].service.request_key(*c)))
+        results["cell"] = list(cell)
+        key = servers[0].service.request_key(*cell)
+        owners = servers[0].cluster.owners(key)
+        slow = next(s for s in servers if s.url == owners[0])
+        # derive once so both phases measure pure forwarded cache hits
+        RemoteMappingService(entry.url).derive(*cell)
+        slow.serve_delay = serve_delay  # the *primary* owner goes hot:
+        # static ring-order forwarding lands every request on it
+        for policy in ("static", "loaded"):
+            # fresh router per phase: no learned state leaks from the
+            # static baseline into the loaded run.  epsilon 0 keeps both
+            # deterministic — measured latency + advertised depth do the
+            # steering; exploration buys nothing with one candidate pair
+            entry.router = RequestRouter(policy=policy, epsilon=0.0,
+                                         seed=0)
+            entry.cluster.load_provider = entry.router.load
+            entry.cluster.on_load = entry.router.advertise
+            row = _hammer_routed(entry, cell, n_conns, per_conn)
+            row["selections"] = {
+                url: snap["selections"] for url, snap in
+                entry.router.selector.snapshot().items()}
+            results[policy] = row
+            emit(f"routing_{policy}_hot_fwd_p50", row["p50_us"],
+                 f"{row['rps']:.0f}rps")
+        slow.serve_delay = 0.0
+    finally:
+        for s in servers:
+            s.close()
+
+    speedup = results["loaded"]["rps"] / results["static"]["rps"]
+    results["loaded_speedup"] = speedup
+
+    # -- ring vs rendezvous placement balance (pure data structures) ------
+    nodes = [f"http://10.0.0.{i}:8080" for i in range(1, 6)]
+    keys = [f"cell-{i:04d}" for i in range(512)]
+    ideal = len(keys) / len(nodes)
+    balance: dict = {}
+    for kind, placement in (
+            ("ring", HashRing(nodes, vnodes=64, replicas=2)),
+            ("rendezvous", RendezvousHash(nodes, replicas=2))):
+        counts = {n: 0 for n in nodes}
+        for k in keys:
+            counts[placement.owners(k)[0]] += 1
+        balance[kind] = {
+            "max_over_ideal": max(counts.values()) / ideal,
+            "min_over_ideal": min(counts.values()) / ideal,
+        }
+        emit(f"routing_balance_{kind}",
+             balance[kind]["max_over_ideal"],
+             f"min {balance[kind]['min_over_ideal']:.2f}x ideal")
+    results["balance"] = balance
+
+    LAST_METRICS["routing"] = results
+    print(f"(loaded {results['loaded']['rps']:.0f}rps vs static "
+          f"{results['static']['rps']:.0f}rps = {speedup:.1f}x with the "
+          f"primary owner sleeping {serve_delay * 1e3:.0f}ms; balance "
+          f"max/ideal ring {balance['ring']['max_over_ideal']:.2f}x vs "
+          f"rendezvous {balance['rendezvous']['max_over_ideal']:.2f}x)")
+    # acceptance: with one slowed replica, load-aware selection sustains
+    # >= 2x the static ring-order hot-derive throughput
+    assert speedup >= 2.0, (
+        f"loaded policy only {speedup:.2f}x static with a slowed replica "
+        f"at {n_conns} connections")
+    return results
 
 
 def evaluate_suite(n_warm: int = 30, n_loops: int = 3) -> dict:

@@ -65,6 +65,12 @@ def _store_from_args(args):
     return build_store(**knobs)
 
 
+def _pick(value, default):
+    """``value`` unless unset — unlike ``or`` this keeps legitimate
+    zeros (epsilon=0, gossip fanout 0 = auto)."""
+    return default if value is None else value
+
+
 def _env(name: str, flag_value, cast=str):
     """Flag wins; else the REPRO_CLUSTER_* env var; else None."""
     if flag_value is not None:
@@ -108,8 +114,29 @@ def _cluster_from_args(args, server):
                                 args.heartbeat_interval, float) or 1.0,
         sync_interval=_env("REPRO_CLUSTER_SYNC_INTERVAL",
                            args.sync_interval, float) or 5.0,
+        placement=_env("REPRO_CLUSTER_PLACEMENT", args.placement) or "ring",
+        weight=_pick(_env("REPRO_CLUSTER_WEIGHT", args.weight, float), 1.0),
+        gossip_fanout=_pick(
+            _env("REPRO_CLUSTER_FANOUT", args.gossip_fanout, int), 0),
     )
     return server.attach_cluster(cluster)
+
+
+def _router_from_args(args):
+    """Build the per-node request router from the CLI knobs, falling back
+    to the REPRO_ROUTER_* env surface for any flag left unset."""
+    from repro.serving.router import RequestRouter
+
+    return RequestRouter(
+        policy=_env("REPRO_ROUTER_POLICY", args.route_policy) or "loaded",
+        max_pending=args.max_pending,
+        ttl=_pick(_env("REPRO_ROUTER_TTL", args.router_ttl, float), 30.0),
+        epsilon=_pick(
+            _env("REPRO_ROUTER_EPSILON", args.router_epsilon, float), 0.05),
+        depth_penalty_ms=_pick(
+            _env("REPRO_ROUTER_DEPTH_PENALTY",
+                 args.router_depth_penalty, float), 5.0),
+    )
 
 
 def serve_maps(args) -> None:
@@ -149,15 +176,20 @@ def serve_maps(args) -> None:
     service = MappingService(store=_store_from_args(args),
                              backend_factory=factory,
                              n_validate=args.n_validate)
+    router = _router_from_args(args)
+    serve_delay = _pick(_env("REPRO_SLOW_SERVE", args.slow_serve, float),
+                        0.0)
     if args.use_async:
         server = AsyncMappingHTTPServer(
             service, host=args.host, port=args.port,
             max_pending=args.max_pending,
-            observability=args.observability)
+            observability=args.observability,
+            router=router, serve_delay=serve_delay)
         server.start()  # bind + loop up before cluster membership probes
     else:
         server = MappingHTTPServer(service, host=args.host, port=args.port,
-                                   observability=args.observability)
+                                   observability=args.observability,
+                                   router=router, serve_delay=serve_delay)
     cluster = _cluster_from_args(args, server)
     store = service.store
     if store is None:
@@ -186,9 +218,16 @@ def serve_maps(args) -> None:
     if cluster is not None:
         print(f"cluster: self={cluster.self_url} replicas="
               f"{cluster.replicas} vnodes={cluster.vnodes} "
+              f"placement={cluster.placement} weight={cluster.weight} "
+              f"gossip_fanout={cluster.gossip_fanout or 'auto'} "
               f"heartbeat={cluster.heartbeat_interval}s "
               f"sync={cluster.sync_interval}s "
               f"peers_up={cluster.live_peers() or 'none'}")
+    print(f"router: policy={router.policy} epsilon={router.selector.epsilon} "
+          f"ttl={router.queue.ttl}s max_pending={router.queue.capacity}")
+    if serve_delay > 0:
+        print(f"CHAOS: --slow-serve active, every derive sleeps "
+              f"{serve_delay}s before serving")
     print("endpoints: POST /v1/derive  POST /v1/evaluate  "
           "GET|DELETE /v1/artifact/<key>  "
           "POST /v1/grid  GET /v1/store/stats  GET /v1/cluster  "
@@ -335,6 +374,46 @@ def main() -> None:
                    help="URL peers should reach this node at (default "
                         "http://HOST:PORT — set this when binding 0.0.0.0) "
                         "[REPRO_CLUSTER_ADVERTISE]")
+    p.add_argument("--placement", choices=("ring", "rendezvous"),
+                   default=None,
+                   help="key->owner placement: weighted consistent-hash "
+                        "ring (default) or rendezvous hashing "
+                        "[REPRO_CLUSTER_PLACEMENT]")
+    p.add_argument("--weight", type=float, default=None,
+                   help="this node's capacity weight — scales its share "
+                        "of the keyspace (default 1.0) "
+                        "[REPRO_CLUSTER_WEIGHT]")
+    p.add_argument("--gossip-fanout", type=int, default=None,
+                   help="peers probed per heartbeat round: N>0 caps at N, "
+                        "0 = auto ceil(log2(fleet))+2 (default), "
+                        "negative = probe everyone [REPRO_CLUSTER_FANOUT]")
+    # load-aware request router (see serving/router.py); every flag falls
+    # back to its REPRO_ROUTER_* env var
+    p.add_argument("--route-policy", choices=("loaded", "static"),
+                   default=None,
+                   help="replica selection: 'loaded' ranks owners by EWMA "
+                        "latency + advertised queue depth (default); "
+                        "'static' keeps placement order "
+                        "[REPRO_ROUTER_POLICY]")
+    p.add_argument("--router-ttl", type=float, default=None,
+                   metavar="SECONDS",
+                   help="queued forwards older than this expire instead of "
+                        "dispatching (default 30.0) [REPRO_ROUTER_TTL]")
+    p.add_argument("--router-epsilon", type=float, default=None,
+                   help="epsilon-greedy exploration rate: probability a "
+                        "non-best replica is promoted so cold replicas get "
+                        "re-measured (default 0.05) [REPRO_ROUTER_EPSILON]")
+    p.add_argument("--router-depth-penalty", type=float, default=None,
+                   metavar="MS",
+                   help="cost penalty per advertised queued request when "
+                        "ranking replicas (default 5.0 ms) "
+                        "[REPRO_ROUTER_DEPTH_PENALTY]")
+    p.add_argument("--slow-serve", type=float, default=None,
+                   metavar="SECONDS",
+                   help="chaos knob: sleep this long before serving every "
+                        "derive — makes this replica artificially slow so "
+                        "load-aware routing can be demonstrated "
+                        "[REPRO_SLOW_SERVE]")
     args = p.parse_args()
 
     if args.serve_maps:

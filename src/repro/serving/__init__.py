@@ -8,7 +8,9 @@ batching (``async_engine``: step-interleaved cohort scheduler for the
 engine backend), the consistent-hash sharded fleet layer (``cluster``:
 ring placement, membership heartbeats, anti-entropy repair), and the
 batched map *evaluation* hot path (``evaluate``: compiled-executable
-groups behind ``POST /v1/evaluate``).  Both frontends carry the
+groups behind ``POST /v1/evaluate``), and the load-aware request router
+(``router``: bounded FIFO + retry lane, EWMA-latency/queue-depth replica
+selection with epsilon-greedy exploration).  Both frontends carry the
 observability plane (``repro.obs``): per-request traces
 (``X-Repro-Trace-Id`` -> ``GET /v1/trace/<id>``) and a metrics registry
 served as JSON and Prometheus text (``GET /metrics?format=prometheus``).
@@ -24,7 +26,7 @@ from repro.serving.batching import (  # noqa: F401
     AdmissionError, BatchingBackend, BatchStats, batching_factory,
 )
 from repro.serving.cluster import (  # noqa: F401
-    ClusterMembership, HashRing,
+    ClusterMembership, HashRing, Placement, RendezvousHash, make_placement,
 )
 from repro.serving.client import (  # noqa: F401
     ClientStats, RemoteBusyError, RemoteMappingService, RemoteServiceError,
@@ -32,3 +34,6 @@ from repro.serving.client import (  # noqa: F401
 )
 from repro.serving.http import MappingHTTPServer  # noqa: F401
 from repro.serving.map_service import MappingService, ServiceStats  # noqa: F401
+from repro.serving.router import (  # noqa: F401
+    ReplicaSelector, RequestQueue, RequestRouter, RouterStats,
+)

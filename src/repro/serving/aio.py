@@ -140,12 +140,22 @@ class AsyncMappingHTTPServer:
                  stall_threshold: float = 0.25,
                  wire_cache_entries: int = 1024,
                  async_backends: list | None = None,
-                 observability: bool = True):
+                 observability: bool = True,
+                 router=None, serve_delay: float = 0.0):
+        from repro.serving.router import RequestRouter
+
         self.service = service
         self.cluster = None
         self.forwarded = 0
         self.forward_errors = 0
         self.forward_timeout = 30.0
+        #: per-node scheduler + load-aware replica selector (see the
+        #: threaded frontend — forwards go to the *best* owner)
+        self.router = router if router is not None else RequestRouter()
+        #: chaos/benchmark knob: delay every derive this long (an
+        #: artificially slowed replica the selector must route around);
+        #: awaited on the loop, so other connections keep being served
+        self.serve_delay = max(0.0, float(serve_delay))
         self.obs = Observability(mode="async", enabled=observability)
         self.max_pending = max_pending
         self.idle_timeout = idle_timeout
@@ -167,7 +177,10 @@ class AsyncMappingHTTPServer:
         self._evaluator_mu = threading.Lock()
         self._executor = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="aio-worker")
-        self._sock = socket.create_server((host, port), reuse_port=False)
+        # fleet-sized accept backlog, matching the threaded frontend's
+        # _FleetHTTPServer: connection bursts must queue, not reset
+        self._sock = socket.create_server((host, port), backlog=128,
+                                          reuse_port=False)
         self.host = host
         self.port = self._sock.getsockname()[1]
         self.obs.node = self.url
@@ -206,6 +219,11 @@ class AsyncMappingHTTPServer:
             else:
                 store.peer.router = cluster.replica_peers
             cluster.store = store
+        # load piggyback + selector feedback, same as the threaded server
+        if cluster.load_provider is None:
+            cluster.load_provider = self.router.load
+        if cluster.on_load is None:
+            cluster.on_load = self.router.advertise
         cluster.start()
         return cluster
 
@@ -300,7 +318,8 @@ class AsyncMappingHTTPServer:
         out = collect_metrics(
             self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
-            evaluator=evaluator, frontend=self.obs.frontend_dict())
+            evaluator=evaluator, frontend=self.obs.frontend_dict(),
+            router=self.router)
         # event-loop frontend counters ride inside the shared "frontend"
         # section (parity with the threaded server's key set) and stay
         # aliased at the legacy top-level "aio" key for existing consumers
@@ -526,6 +545,8 @@ class AsyncMappingHTTPServer:
             "uptime_seconds": self.obs.uptime_seconds(),
             "started_unix": self.obs.started_unix,
             "backend_names": sorted(self.service.backends()),
+            # advertised load, same numbers the cluster view piggybacks
+            "load": self.router.load(),
         }
         if self.cluster is not None:
             payload["cluster_nodes_up"] = len(self.cluster.live_peers()) + 1
@@ -710,6 +731,8 @@ class AsyncMappingHTTPServer:
         body = conn.body()
         domain, model, stage = self._derive_cell(body)
         cell = (domain, model, stage)
+        if self.serve_delay > 0:  # chaos knob: a slowed replica — awaited,
+            await asyncio.sleep(self.serve_delay)  # other conns unaffected
         # hot path, entirely on the event loop: memoized content address +
         # memory-tier result + cached wire bytes — no thread handoff
         res = self.service.try_cached(domain, model, stage)
@@ -731,7 +754,8 @@ class AsyncMappingHTTPServer:
         # cache_hit=false, which is only true once — repeats take the
         # try_cached path above and cache the truthful rehydrated bytes.
         def run() -> bytes:
-            r = self.service.derive(domain, model, stage)
+            with self.router.track():
+                r = self.service.derive(domain, model, stage)
             return json.dumps(
                 pipeline.wire_from_result(r), default=str).encode()
 
@@ -742,9 +766,10 @@ class AsyncMappingHTTPServer:
                              model: str, stage: int) -> bool:
         """One-hop ownership forwarding, same policy as the threaded server
         (serve locally when resident or owned; degrade to local derivation
-        when every replica is unreachable).  The blocking hop runs on the
-        worker pool under admission control — a slow owner consumes one
-        offload slot, never the event loop."""
+        when every replica is unreachable).  Owner order comes from the
+        router's replica selector; the blocking hop runs on the worker pool
+        under admission control — a slow owner consumes one offload slot,
+        never the event loop."""
         cluster = self.cluster
         if cluster is None or conn.headers.get(FORWARDED_HEADER.lower()):
             return False
@@ -755,27 +780,34 @@ class AsyncMappingHTTPServer:
         store = self.service.store
         if store is not None and key in store:
             return False
+        candidates = cluster.replica_peers(key)
+
+        def attempt(owner: str) -> tuple[int, bytes]:
+            req = urllib.request.Request(
+                f"{owner}/v1/derive", data=json.dumps(body).encode(),
+                method="POST",
+                headers={"Content-Type": "application/json",
+                         FORWARDED_HEADER: "1",
+                         **obs_trace.wire_headers()})
+            try:
+                with obs_trace.span("forward", owner=owner), \
+                        urllib.request.urlopen(  # noqa: S310 — fleet URL
+                            req, timeout=self.forward_timeout) as resp:
+                    return resp.status, resp.read()
+            except urllib.error.HTTPError as e:
+                return e.code, e.read()  # the owner answered: relay verdict
+
+        def on_error(owner: str, exc: Exception) -> None:
+            self.forward_errors += 1
 
         def hop() -> tuple[int, bytes] | None:
-            for owner in cluster.replica_peers(key):
-                req = urllib.request.Request(
-                    f"{owner}/v1/derive", data=json.dumps(body).encode(),
-                    method="POST",
-                    headers={"Content-Type": "application/json",
-                             FORWARDED_HEADER: "1",
-                             **obs_trace.wire_headers()})
-                try:
-                    with obs_trace.span("forward", owner=owner), \
-                            urllib.request.urlopen(  # noqa: S310 — fleet URL
-                                req, timeout=self.forward_timeout) as resp:
-                        return resp.status, resp.read()
-                except urllib.error.HTTPError as e:
-                    return e.code, e.read()
-                except (urllib.error.URLError, ConnectionError,
-                        TimeoutError, OSError):
-                    self.forward_errors += 1
-                    continue
-            return None
+            with obs_trace.span("route_decision", key=key[:16],
+                                candidates=len(candidates),
+                                policy=self.router.policy) as span:
+                answer = self.router.dispatch(key, candidates, attempt,
+                                              on_error=on_error)
+                span["forwarded"] = answer is not None
+            return answer
 
         relayed = await self._offload(hop)
         if relayed is None:

@@ -18,12 +18,16 @@ before the normal retry/backoff machinery sees anything.  Constructing with
 pre-PR-5 behavior, kept as the benchmark baseline.
 
 Cluster awareness: against a sharded fleet (``--cluster-seed``), the client
-fetches the ``GET /v1/cluster`` view once, builds the same
-:class:`~repro.serving.cluster.HashRing` the servers use, and — as soon as
-a cell's content address is known from its first response — hashes locally
-and sends repeat derives straight to the key's owner, skipping the
-server-side forwarding hop.  Against a standalone server (404 on
-/v1/cluster) all of this degrades to plain single-host behavior.
+fetches the ``GET /v1/cluster`` view once, builds the same weighted
+placement the servers use (ring or rendezvous — the view says which), and —
+as soon as a cell's content address is known from its first response —
+hashes locally and sends repeat derives straight to the key's owners,
+skipping the server-side forwarding hop.  Among the K owners it ranks by
+its *own* observed per-host latency (EWMA, seeded by the view's advertised
+queue depths) before the ring-order fallback, so a slow replica loses this
+client's traffic without any server-side help.  Against a standalone
+server (404 on /v1/cluster) all of this degrades to plain single-host
+behavior.
 
 Failure policy, in order:
 
@@ -198,10 +202,16 @@ class RemoteMappingService:
         self._fallback = fallback
         self._fallback_service: MappingService | None = None
         self._tls = threading.local()  # per-thread connection pool
-        self._ring = None              # HashRing once the view is fetched
+        self._ring = None              # Placement once the view is fetched
         self._ring_checked = False     # 404 = standalone server: stay plain
         self._cell_keys: dict[tuple[str, str, int], str] = {}
         self._local_evaluator = None   # lazy EvaluationService fallback
+        # client-side replica ranking: EWMA of *this client's* observed
+        # per-host latency (no exploration — ring order is the tiebreak and
+        # the fallback, so an unknown owner is simply tried in ring order)
+        from repro.serving.router import ReplicaSelector
+
+        self._selector = ReplicaSelector(epsilon=0.0, seed=0)
 
     # -- connection pool ---------------------------------------------------
     def _conns(self) -> dict:
@@ -359,53 +369,74 @@ class RemoteMappingService:
             self._ring_checked = False  # transient: retry on the next call
             return None
         from repro.serving.cluster import (
-            DEFAULT_REPLICAS, DEFAULT_VNODES, HashRing,
+            DEFAULT_REPLICAS, DEFAULT_VNODES, make_placement,
         )
-        nodes = [n.get("url") for n in view.get("nodes", [])
-                 if isinstance(n, dict) and n.get("status") == "up"]
-        self._ring = HashRing(
-            [n for n in nodes if n],
-            vnodes=int(view.get("vnodes", DEFAULT_VNODES)),
-            replicas=int(view.get("replicas", DEFAULT_REPLICAS)))
+        nodes = []
+        for n in view.get("nodes", []):
+            if not (isinstance(n, dict) and n.get("status") == "up"
+                    and n.get("url")):
+                continue
+            nodes.append((n["url"], n.get("weight", 1.0)))
+            # seed the latency ranking with the fleet's advertised queue
+            # depths — useful before this client has observed anything
+            self._selector.advertise(n["url"], n.get("load"))
+        try:
+            self._ring = make_placement(
+                str(view.get("placement", "ring")), nodes,
+                vnodes=int(view.get("vnodes", DEFAULT_VNODES)),
+                replicas=int(view.get("replicas", DEFAULT_REPLICAS)))
+        except ValueError:
+            self._ring = None  # a placement this client doesn't speak:
+            return None        # plain single-host behavior, still correct
         return self._ring
 
     def _invalidate_ring(self) -> None:
         self._ring = None
         self._ring_checked = False
 
-    def _owner_url(self, key: str | None) -> str | None:
-        """Where a request for ``key`` should land: the ring's primary
-        owner, or None when unknown / unclustered / already the home URL."""
+    def _owner_urls(self, key: str | None) -> list[str]:
+        """Where a request for ``key`` should land, best first: the key's
+        K owners ranked by this client's own observed latency (ring order
+        breaks ties and covers never-observed owners).  Empty when unknown
+        / unclustered; a leading home URL means "don't route"."""
         if key is None:
-            return None
+            return []
         ring = self._cluster_ring()
         if ring is None:
-            return None
-        owners = ring.owners(key)
-        if not owners or owners[0] == self.url:
-            return None
-        return owners[0]
+            return []
+        return self._selector.rank(ring.owners(key))
 
     def _call_routed(self, path: str, body: dict | None, key: str | None,
                      method: str | None = None,
                      headers: dict | None = None) -> dict:
-        """``_call_json`` addressed to ``key``'s ring owner when one is
-        known, degrading to the home URL when the owner is unreachable —
-        a definite answer from the owner (400/404/500) stands."""
-        owner = self._owner_url(key)
-        if owner is None:
+        """``_call_json`` addressed to ``key``'s best ring owner when one
+        is known, walking down the latency ranking and finally degrading to
+        the home URL when every owner is unreachable — a definite answer
+        from an owner (400/404/500) stands.  Every attempt's latency feeds
+        the ranking, so a slowing replica loses this client's preference
+        without any server-side help."""
+        owners = self._owner_urls(key)
+        if not owners or owners[0] == self.url:
             return self._call_json(path, body, method, headers=headers)
-        try:
-            payload = self._call_json(path, body, method, base=owner,
-                                      headers=headers)
+        for owner in owners:
+            if owner == self.url:
+                break  # the home URL is next-best: take the plain path
+            t0 = time.monotonic()
+            try:
+                payload = self._call_json(path, body, method, base=owner,
+                                          headers=headers)
+            except RemoteServiceError as e:
+                self._selector.observe(owner, time.monotonic() - t0,
+                                       ok=False)
+                if not _falls_back(e):
+                    raise
+                self.stats.reroutes += 1
+                self._invalidate_ring()  # the view that routed us is stale
+                continue                 # next-best owner, then home
+            self._selector.observe(owner, time.monotonic() - t0)
             self.stats.routed += 1
             return payload
-        except RemoteServiceError as e:
-            if not _falls_back(e):
-                raise
-            self.stats.reroutes += 1
-            self._invalidate_ring()  # the view that routed us is stale
-            return self._call_json(path, body, method, headers=headers)
+        return self._call_json(path, body, method, headers=headers)
 
     # -- fallback ----------------------------------------------------------
     def _local(self) -> MappingService | None:

@@ -5,17 +5,23 @@ PR 4's replication mesh was static — every node pushed every record to every
 store and an operator re-wired flags to grow it.  This module makes the
 fleet self-organizing and sharded:
 
-  * :class:`HashRing`          — consistent hashing with virtual nodes.
-    Each record key maps deterministically to ``replicas`` owner nodes (the
-    first K distinct nodes clockwise from the key's point), so N servers
-    hold ~K/N of the store each, and a join/leave remaps only the keys
-    adjacent to the changed node instead of reshuffling everything.
+  * :class:`Placement`         — the strategy interface: a deterministic
+    ``key -> [owners]`` function over a *weighted* node set (per-node
+    ``--weight`` for heterogeneous disk/compute budgets).
+    :class:`HashRing` (consistent hashing, weight scales vnode count) is
+    the default; :class:`RendezvousHash` (highest-random-weight) is the
+    alternative with tighter balance at small N — selected fleet-wide via
+    ``--placement`` and carried on the view so clients route identically.
   * :class:`ClusterMembership` — seed-based discovery: a new node is told
     one live node (``--cluster-seed``) and learns the rest through the
-    ``GET /v1/cluster`` view-exchange endpoint.  A periodic heartbeat probes
-    every known node; a node that stops answering past ``down_after`` is
-    marked down and drops out of the ring, and a rejoining node (same URL)
-    is folded back in on its first successful probe.
+    ``GET /v1/cluster`` view-exchange endpoint.  A periodic heartbeat
+    probes a deterministic-random O(log N) subset per round (the gossip
+    fanout cap — membership traffic grows O(N log N), not O(N²)); a node
+    that stops answering past ``down_after`` is marked down and drops out
+    of the ring, and a rejoining node (same URL) is folded back in on its
+    first successful probe.  Views piggyback each node's weight and live
+    load (queue depth), which is what feeds the load-aware replica
+    selector in :mod:`repro.serving.router`.
   * anti-entropy repair        — every ``sync_interval`` the node exchanges
     key manifests (``GET /v1/replicate/manifest``) with its live peers and
     pulls any record it *owns* but lacks.  That is how a node recovers
@@ -35,6 +41,8 @@ from __future__ import annotations
 import bisect
 import hashlib
 import json
+import math
+import random
 import threading
 import time
 import urllib.error
@@ -47,6 +55,9 @@ from repro.core.store import valid_key, verify_envelope
 DEFAULT_VNODES = 64
 DEFAULT_REPLICAS = 2
 
+#: placement strategies selectable via ``--placement`` / the view payload
+PLACEMENTS = ("ring", "rendezvous")
+
 
 def _hash(data: str) -> int:
     """Ring position of a node vnode or a record key: the first 8 bytes of
@@ -55,47 +66,104 @@ def _hash(data: str) -> int:
     return int.from_bytes(hashlib.sha256(data.encode()).digest()[:8], "big")
 
 
-class HashRing:
-    """Consistent-hash ring with virtual nodes and K-successor placement.
+class Placement:
+    """What the fleet needs from a placement strategy: a deterministic
+    ``key -> [owner URLs]`` function over a weighted node set.  Both
+    implementations are pure functions of ``(node, weight)`` pairs plus
+    their own parameters — insertion order is irrelevant — so any two
+    parties holding the same view route identically.  Weights let
+    heterogeneous nodes (bigger disk, faster accelerator) claim a
+    proportionally larger share of the key space."""
 
-    Deterministic by construction: the ring is a pure function of the node
-    URL set and ``vnodes`` (insertion order is irrelevant), so any two
-    parties with the same view route identically.  ``owners(key)`` returns
-    the first ``replicas`` *distinct* nodes clockwise from the key's point
-    — fewer when the ring is smaller than K."""
+    kind = "placement"
 
-    def __init__(self, nodes: Iterable[str] = (), vnodes: int = DEFAULT_VNODES,
+    def __init__(self, nodes: Iterable = (),
                  replicas: int = DEFAULT_REPLICAS):
-        self.vnodes = max(1, int(vnodes))
         self.replicas = max(1, int(replicas))
-        self._points: list[tuple[int, str]] = []  # sorted (position, node)
+        self._weights: dict[str, float] = {}
         for node in nodes:
-            self.add(node)
+            if isinstance(node, str):
+                self.add(node)
+            else:  # (url, weight) pair
+                self.add(node[0], node[1])
 
     # -- membership --------------------------------------------------------
-    def add(self, node: str) -> None:
-        if node in self:
-            return
-        for i in range(self.vnodes):
-            bisect.insort(self._points, (_hash(f"{node}#{i}"), node))
+    def add(self, node: str, weight: float = 1.0) -> None:
+        raise NotImplementedError
 
     def remove(self, node: str) -> None:
-        self._points = [(p, n) for p, n in self._points if n != node]
+        raise NotImplementedError
+
+    @staticmethod
+    def _clamp_weight(weight: float) -> float:
+        try:
+            weight = float(weight)
+        except (TypeError, ValueError):
+            weight = 1.0
+        if not math.isfinite(weight) or weight <= 0:
+            weight = 1.0
+        return min(weight, 64.0)  # one node can never dwarf the fleet
+
+    def weight(self, node: str) -> float:
+        return self._weights.get(node, 1.0)
+
+    @property
+    def weights(self) -> dict[str, float]:
+        return dict(self._weights)
 
     @property
     def nodes(self) -> list[str]:
-        return sorted({n for _, n in self._points})
+        return sorted(self._weights)
 
     def __contains__(self, node: str) -> bool:
-        return any(n == node for _, n in self._points)
+        return node in self._weights
 
     def __len__(self) -> int:
-        return len(self.nodes)
+        return len(self._weights)
 
     # -- placement ---------------------------------------------------------
     def owners(self, key: str, n: int | None = None) -> list[str]:
         """The ``n`` (default ``replicas``) distinct nodes that own ``key``,
-        in preference order (primary first).  Empty ring -> empty list."""
+        in preference order (primary first).  Empty set -> empty list."""
+        raise NotImplementedError
+
+    def primary(self, key: str) -> str | None:
+        owners = self.owners(key, 1)
+        return owners[0] if owners else None
+
+
+class HashRing(Placement):
+    """Consistent-hash ring with virtual nodes and K-successor placement.
+
+    ``owners(key)`` returns the first ``replicas`` *distinct* nodes
+    clockwise from the key's point — fewer when the ring is smaller than K.
+    A node's weight scales its vnode count (``round(vnodes * weight)``), so
+    a weight-2 node claims ~2x the key space of a weight-1 sibling while a
+    join/leave still only remaps keys adjacent to the changed node."""
+
+    kind = "ring"
+
+    def __init__(self, nodes: Iterable = (), vnodes: int = DEFAULT_VNODES,
+                 replicas: int = DEFAULT_REPLICAS):
+        self.vnodes = max(1, int(vnodes))
+        self._points: list[tuple[int, str]] = []  # sorted (position, node)
+        super().__init__(nodes, replicas=replicas)
+
+    # -- membership --------------------------------------------------------
+    def add(self, node: str, weight: float = 1.0) -> None:
+        if node in self:
+            return
+        weight = self._clamp_weight(weight)
+        self._weights[node] = weight
+        for i in range(max(1, round(self.vnodes * weight))):
+            bisect.insort(self._points, (_hash(f"{node}#{i}"), node))
+
+    def remove(self, node: str) -> None:
+        self._weights.pop(node, None)
+        self._points = [(p, n) for p, n in self._points if n != node]
+
+    # -- placement ---------------------------------------------------------
+    def owners(self, key: str, n: int | None = None) -> list[str]:
         if not self._points:
             return []
         want = self.replicas if n is None else max(1, int(n))
@@ -109,21 +177,78 @@ class HashRing:
                     break
         return out
 
-    def primary(self, key: str) -> str | None:
-        owners = self.owners(key, 1)
-        return owners[0] if owners else None
+
+class RendezvousHash(Placement):
+    """Rendezvous (highest-random-weight) placement.
+
+    Every node scores every key independently — ``owners(key)`` is the K
+    highest scorers — so there is no ring geometry at all: a join/leave
+    remaps exactly the keys the changed node wins/loses, and balance is
+    tighter than a vnode ring's at small fleet sizes (no vnode clumping).
+    The cost is O(N) hashing per lookup instead of O(log vnodes·N), which
+    is why it's the comparison alternative rather than the default: below
+    ~100 nodes the difference is noise, and the benchmark row keeps both
+    honest.  Weights use the standard ``-w / ln(h)`` transform, giving a
+    weight-2 node exactly 2x the win probability per key."""
+
+    kind = "rendezvous"
+
+    def __init__(self, nodes: Iterable = (), vnodes: int = DEFAULT_VNODES,
+                 replicas: int = DEFAULT_REPLICAS):
+        self.vnodes = max(1, int(vnodes))  # unused; kept for view parity
+        super().__init__(nodes, replicas=replicas)
+
+    # -- membership --------------------------------------------------------
+    def add(self, node: str, weight: float = 1.0) -> None:
+        if node not in self:
+            self._weights[node] = self._clamp_weight(weight)
+
+    def remove(self, node: str) -> None:
+        self._weights.pop(node, None)
+
+    # -- placement ---------------------------------------------------------
+    def _score(self, node: str, weight: float, key: str) -> float:
+        # _hash is uniform on [0, 2^64); shift to (0, 1) so ln() is finite
+        h = (_hash(f"{node}|{key}") + 1) / float((1 << 64) + 1)
+        return -weight / math.log(h)
+
+    def owners(self, key: str, n: int | None = None) -> list[str]:
+        if not self._weights:
+            return []
+        want = self.replicas if n is None else max(1, int(n))
+        ranked = sorted(self._weights,
+                        key=lambda u: (-self._score(u, self._weights[u], key),
+                                       u))
+        return ranked[:want]
+
+
+def make_placement(kind: str, nodes: Iterable = (),
+                   vnodes: int = DEFAULT_VNODES,
+                   replicas: int = DEFAULT_REPLICAS) -> Placement:
+    """Placement factory keyed by the ``placement`` field every node (and
+    the ring-aware client) reads off the ``/v1/cluster`` view — the whole
+    fleet must run one strategy or two nodes would disagree on owners."""
+    kind = (kind or "ring").strip().lower()
+    if kind == "rendezvous":
+        return RendezvousHash(nodes, vnodes=vnodes, replicas=replicas)
+    if kind in ("", "ring"):
+        return HashRing(nodes, vnodes=vnodes, replicas=replicas)
+    raise ValueError(f"unknown placement {kind!r} (expected one of "
+                     f"{', '.join(PLACEMENTS)})")
 
 
 class _Node:
     """One known fleet member, as seen from this node."""
 
-    __slots__ = ("url", "up", "last_seen", "failures")
+    __slots__ = ("url", "up", "last_seen", "failures", "weight", "load")
 
     def __init__(self, url: str):
         self.url = url
         self.up = False
         self.last_seen: float | None = None  # monotonic; None = never
         self.failures = 0                    # consecutive failed probes
+        self.weight = 1.0                    # learned from the node's view
+        self.load: dict = {}                 # last advertised load snapshot
 
 
 class ClusterMembership:
@@ -144,10 +269,27 @@ class ClusterMembership:
                  forget_after: float | None = None,
                  sync_interval: float = 5.0,
                  probe_timeout: float = 2.0,
-                 store=None):
+                 store=None,
+                 placement: str = "ring",
+                 weight: float = 1.0,
+                 gossip_fanout: int = 0,
+                 load_provider: Callable[[], dict] | None = None,
+                 on_load: Callable[[str, dict], Any] | None = None):
         self.self_url = self_url.rstrip("/")
         self.vnodes = max(1, int(vnodes))
         self.replicas = max(1, int(replicas))
+        self.placement = (placement or "ring").strip().lower()
+        make_placement(self.placement)  # fail fast on an unknown strategy
+        self.weight = Placement._clamp_weight(weight)
+        # 0 = auto: ceil(log2(N)) + 2, recomputed per round as N changes;
+        # <0 = uncapped (probe everyone, the pre-PR-9 behavior)
+        self.gossip_fanout = int(gossip_fanout)
+        #: this node's own advertised load (piggybacked on every view);
+        #: the HTTP frontends point this at their router's queue snapshot
+        self.load_provider = load_provider
+        #: callback fed every (url, load) advertisement a probe brings back
+        #: — the router's selector learns peer queue depths through it
+        self.on_load = on_load
         self.heartbeat_interval = heartbeat_interval
         self.down_after = (3.0 * heartbeat_interval if down_after is None
                            else down_after)
@@ -162,12 +304,16 @@ class ClusterMembership:
         self._nodes: dict[str, _Node] = {}
         self._aliases: set[str] = set()  # URLs discovered to be *us*
         self._mu = threading.Lock()
-        self._ring = HashRing([self.self_url], vnodes=self.vnodes,
-                              replicas=self.replicas)
+        self._ring = make_placement(
+            self.placement, [(self.self_url, self.weight)],
+            vnodes=self.vnodes, replicas=self.replicas)
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._probe_cycle: list[str] = []  # pending probe order (capped mode)
+        self._cycle_epoch = 0
         # counters
         self.heartbeats = 0
+        self.probes_last_round = 0
         self.probe_failures = 0
         self.transitions = 0          # up<->down flips observed
         self.manifest_exchanges = 0
@@ -186,11 +332,13 @@ class ClusterMembership:
     # -- ring views --------------------------------------------------------
     def _rebuild_ring(self) -> None:
         """Callers hold ``_mu``."""
-        live = [self.self_url] + [n.url for n in self._nodes.values() if n.up]
-        self._ring = HashRing(live, vnodes=self.vnodes, replicas=self.replicas)
+        live = [(self.self_url, self.weight)] + [
+            (n.url, n.weight) for n in self._nodes.values() if n.up]
+        self._ring = make_placement(self.placement, live, vnodes=self.vnodes,
+                                    replicas=self.replicas)
 
     @property
-    def ring(self) -> HashRing:
+    def ring(self) -> Placement:
         with self._mu:
             return self._ring
 
@@ -211,19 +359,43 @@ class ClusterMembership:
             return sorted(n.url for n in self._nodes.values() if n.up)
 
     # -- view exchange (the /v1/cluster payload) ---------------------------
+    def _self_load(self) -> dict:
+        provider = self.load_provider
+        if provider is None:
+            return {}
+        try:
+            load = provider()
+        except Exception:  # noqa: BLE001 — advertising must never 500 a view
+            return {}
+        return load if isinstance(load, dict) else {}
+
     def view(self) -> dict[str, Any]:
         now = time.monotonic()
+        self_entry = {"url": self.self_url, "status": "up", "self": True,
+                      "weight": self.weight, "load": self._self_load()}
         with self._mu:
-            nodes = [{"url": self.self_url, "status": "up", "self": True}]
+            nodes = [self_entry]
             for n in sorted(self._nodes.values(), key=lambda n: n.url):
                 nodes.append({
                     "url": n.url,
                     "status": "up" if n.up else "down",
                     "age_seconds": (None if n.last_seen is None
                                     else now - n.last_seen),
+                    "weight": n.weight,
+                    "load": dict(n.load),
                 })
         return {"self": self.self_url, "replicas": self.replicas,
-                "vnodes": self.vnodes, "nodes": nodes}
+                "vnodes": self.vnodes, "placement": self.placement,
+                "nodes": nodes}
+
+    def node_loads(self) -> dict[str, dict]:
+        """Last advertised load per live peer (the heartbeat piggyback the
+        router's selector consumes), self included."""
+        with self._mu:
+            loads = {n.url: dict(n.load)
+                     for n in self._nodes.values() if n.up}
+        loads[self.self_url] = self._self_load()
+        return loads
 
     def stats(self) -> dict[str, Any]:
         with self._mu:
@@ -231,6 +403,9 @@ class ClusterMembership:
             known = len(self._nodes) + 1
         return {"self": self.self_url, "nodes_up": up, "nodes_known": known,
                 "replicas": self.replicas, "vnodes": self.vnodes,
+                "placement": self.placement, "weight": self.weight,
+                "gossip_fanout": self.effective_fanout(known),
+                "probes_last_round": self.probes_last_round,
                 "heartbeats": self.heartbeats,
                 "probe_failures": self.probe_failures,
                 "transitions": self.transitions,
@@ -282,6 +457,13 @@ class ClusterMembership:
                 return []
             revealed = [str(n.get("url", "")) for n in view.get("nodes", [])
                         if isinstance(n, dict) and n.get("status") == "up"]
+            # the peer's own entry carries its weight + live load snapshot
+            weight, load = 1.0, {}
+            for entry in view.get("nodes", []):
+                if isinstance(entry, dict) and entry.get("self"):
+                    weight = Placement._clamp_weight(entry.get("weight", 1.0))
+                    load = entry.get("load") or {}
+                    break
             ok = True
         except (urllib.error.URLError, ConnectionError, TimeoutError,
                 OSError, ValueError):
@@ -294,9 +476,14 @@ class ClusterMembership:
             if ok:
                 node.last_seen = now
                 node.failures = 0
+                node.load = load if isinstance(load, dict) else {}
+                reweighted = node.weight != weight
+                node.weight = weight
                 if not node.up:  # fresh join or rejoin
                     node.up = True
                     self.transitions += 1
+                    self._rebuild_ring()
+                elif reweighted:  # operator restarted it with a new budget
                     self._rebuild_ring()
             else:
                 self.probe_failures += 1
@@ -308,6 +495,11 @@ class ClusterMembership:
                     node.up = False
                     self.transitions += 1
                     self._rebuild_ring()
+        if ok and self.on_load is not None:
+            try:  # hand the piggybacked load to the router's selector
+                self.on_load(url, node.load)
+            except Exception:  # noqa: BLE001 — routing hints must not break
+                pass           # membership
         return revealed if ok else []
 
     def _forget_dead(self) -> None:
@@ -328,27 +520,82 @@ class ClusterMembership:
                     del self._nodes[url]
                     self.forgotten += 1
 
+    def effective_fanout(self, n_known: int) -> int:
+        """Probes allowed per round: the configured cap, or the O(log N)
+        auto cap (``ceil(log2 N) + 2``) when ``gossip_fanout == 0``.  A
+        negative setting disables the cap (probe everyone, the pre-adaptive
+        behavior).  With the cap, fleet-wide membership traffic is
+        O(N log N) per interval instead of O(N²), and a dead node is still
+        noticed within ``down_after`` plus one cycle (≤ ``ceil(N/fanout)``
+        rounds), because the shuffled cycle visits every node."""
+        if self.gossip_fanout > 0:
+            return self.gossip_fanout
+        if self.gossip_fanout < 0:
+            return max(1, n_known)
+        return math.ceil(math.log2(max(2, n_known))) + 2
+
+    def _next_probe_targets(self) -> list[str]:
+        """The deterministic-random subset this round probes.  A shuffled
+        cycle (reshuffled each time it drains, seeded from the node URL and
+        a cycle counter) guarantees every known node is visited at least
+        once per ``ceil(N/fanout)`` rounds — a plain random sample would
+        leave unlucky nodes unprobed for unboundedly long."""
+        with self._mu:
+            known = set(self._nodes)
+        fanout = self.effective_fanout(len(known))
+        if fanout >= len(known):
+            return sorted(known)
+        targets: list[str] = []
+        self._probe_cycle = [u for u in self._probe_cycle if u in known]
+        for _ in range(2 * len(known)):
+            if len(targets) >= fanout:
+                break
+            if not self._probe_cycle:
+                cycle = sorted(known)
+                random.Random(_hash(
+                    f"{self.self_url}#cycle#{self._cycle_epoch}"
+                )).shuffle(cycle)
+                self._probe_cycle = cycle
+                self._cycle_epoch += 1
+            url = self._probe_cycle.pop(0)
+            if url not in targets:
+                targets.append(url)
+        return targets
+
     def heartbeat_now(self) -> None:
-        """One full membership round: probe every known node, folding in any
-        URL a view reveals (and probing the newcomers in the same round, so
-        a single heartbeat after a seed bootstrap reaches the whole fleet)."""
+        """One membership round: probe the capped deterministic-random
+        subset of known nodes, folding in any URL a view reveals.  Nodes
+        never probed before (fresh announces, seed-bootstrap reveals) are
+        probed in the same round regardless of the cap, so a single
+        heartbeat after a seed bootstrap still reaches the whole fleet —
+        the cap only paces the steady-state re-probing that was O(N²)."""
         self.heartbeats += 1
         probed: set[str] = set()
-        while True:
+
+        def probe_one(url: str) -> None:
+            probed.add(url)
+            for revealed in self._probe(url):
+                revealed = revealed.rstrip("/")
+                if not revealed or revealed == self.self_url:
+                    continue
+                with self._mu:
+                    if revealed not in self._nodes \
+                            and revealed not in self._aliases:
+                        self._nodes[revealed] = _Node(revealed)
+
+        for url in self._next_probe_targets():
+            if url not in probed:
+                probe_one(url)
+        while True:  # newcomers revealed mid-round join immediately
             with self._mu:
-                pending = [u for u in self._nodes if u not in probed]
-            if not pending:
+                fresh = [u for u, n in self._nodes.items()
+                         if u not in probed and n.last_seen is None
+                         and n.failures == 0]
+            if not fresh:
                 break
-            for url in pending:
-                probed.add(url)
-                for revealed in self._probe(url):
-                    revealed = revealed.rstrip("/")
-                    if not revealed or revealed == self.self_url:
-                        continue
-                    with self._mu:
-                        if revealed not in self._nodes \
-                                and revealed not in self._aliases:
-                            self._nodes[revealed] = _Node(revealed)
+            for url in fresh:
+                probe_one(url)
+        self.probes_last_round = len(probed)
         self._forget_dead()
 
     # -- anti-entropy repair -----------------------------------------------

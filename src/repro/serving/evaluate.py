@@ -297,8 +297,12 @@ class EvaluationService:
             self.stats.groups += len(groups)
             self.stats.shared += len(plans) - len(groups)
             self.stats.points += sum(p.n_points for p in plans)
+            # per dispatched query: every member of a group is served from
+            # the group's padded launch, so a group of k queries padded to
+            # P accounts k*P — keeping padded_points >= points and the
+            # derived padding_overhead in [0, 1) even when merging wins
             self.stats.padded_points += sum(
-                lp for (_, _, lp, _, _) in launched)
+                lp * len(members) for (members, _, lp, _, _) in launched)
         meta = {
             "queries": len(plans),
             "groups": len(groups),

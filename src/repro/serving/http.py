@@ -92,6 +92,17 @@ MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
 FORWARDED_HEADER = "X-Repro-Forwarded"
 
 
+class _FleetHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer with a fleet-sized accept backlog.  The stdlib
+    default (``request_queue_size = 5``) drops connections under the
+    bursts a sharded fleet actually produces — 64 clients opening at
+    once, or a router fanning forwarded hops into one hot owner — which
+    surfaces as resets, spurious failure penalties in the replica
+    selector, and needless local-degradation derives."""
+
+    request_queue_size = 128
+
+
 def map_error(e: BaseException) -> tuple[int, dict]:
     """Typed exception -> (status, JSON body), shared by the threaded and
     asyncio frontends so the two paths can never disagree on a wire code:
@@ -117,7 +128,8 @@ def map_error(e: BaseException) -> tuple[int, dict]:
 
 def collect_metrics(service: MappingService, http: dict, cluster=None,
                     forwarded: int = 0, forward_errors: int = 0,
-                    evaluator=None, frontend: dict | None = None) -> dict:
+                    evaluator=None, frontend: dict | None = None,
+                    router=None) -> dict:
     """The shared /metrics payload shape — one builder for the threaded and
     asyncio frontends so scrapers see identical keys from either.  The
     per-endpoint ``http`` section comes from the observability plane's
@@ -148,6 +160,10 @@ def collect_metrics(service: MappingService, http: dict, cluster=None,
         out["cluster"] = {**cluster.stats(),
                           "forwarded": forwarded,
                           "forward_errors": forward_errors}
+    if router is not None:
+        # queue depth/expiry/retry gauges + per-replica selection counters
+        # (the numbers the routing chaos CI leg asserts traffic shifts on)
+        out["router"] = router.stats_dict()
     if evaluator is not None:
         # stats_dict embeds the compile-cache counters; surface them at
         # the top level too so scrapers find one well-known key
@@ -165,7 +181,10 @@ class MappingHTTPServer:
     the listener down and joins it.  Usable as a context manager."""
 
     def __init__(self, service: MappingService, host: str = "127.0.0.1",
-                 port: int = 0, observability: bool = True):
+                 port: int = 0, observability: bool = True,
+                 router=None, serve_delay: float = 0.0):
+        from repro.serving.router import RequestRouter
+
         self.service = service
         self.cluster = None  # ClusterMembership once attach_cluster() ran
         self.forwarded = 0          # derives proxied to their ring owner
@@ -174,13 +193,20 @@ class MappingHTTPServer:
         # pin forwarding threads past the point the caller has given up —
         # the forward degrades to local derivation instead
         self.forward_timeout = 30.0
+        #: per-node scheduler + load-aware replica selector (forwards go to
+        #: the *best* owner, not the first; queue depth is advertised to
+        #: peers via the cluster view and /healthz)
+        self.router = router if router is not None else RequestRouter()
+        #: chaos/benchmark knob: sleep this long before serving each derive
+        #: (an artificially slowed replica the selector must route around)
+        self.serve_delay = max(0.0, float(serve_delay))
         self.obs = Observability(mode="threaded", enabled=observability)
         self._evaluator = None       # EvaluationService, built on first use
         self._evaluator_mu = threading.Lock()
         self._conn_sockets: set = set()  # live keep-alive connections
         self._conn_mu = threading.Lock()
         handler = _make_handler(self)
-        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd = _FleetHTTPServer((host, port), handler)
         self.httpd.daemon_threads = True
         self.host = host
         self.port = self.httpd.server_address[1]
@@ -220,6 +246,13 @@ class MappingHTTPServer:
             else:
                 store.peer.router = cluster.replica_peers
             cluster.store = store
+        # load piggyback: our queue depth rides every view we serve, and
+        # every successful probe feeds the peer's advertised depth into the
+        # replica selector
+        if cluster.load_provider is None:
+            cluster.load_provider = self.router.load
+        if cluster.on_load is None:
+            cluster.on_load = self.router.advertise
         cluster.start()
         return cluster
 
@@ -278,7 +311,8 @@ class MappingHTTPServer:
         return collect_metrics(
             self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
-            evaluator=evaluator, frontend=self.obs.frontend_dict())
+            evaluator=evaluator, frontend=self.obs.frontend_dict(),
+            router=self.router)
 
     def metrics_prometheus(self) -> str:
         """The same numbers as Prometheus text exposition: registered
@@ -297,6 +331,11 @@ def _make_handler(server: MappingHTTPServer):
         # reap idle keep-alive connections so abandoned clients don't pin
         # a handler thread forever (socket timeout -> close_connection)
         timeout = 60.0
+        # TCP_NODELAY: headers and body go out as separate small writes,
+        # and on a keep-alive connection Nagle holds the second one until
+        # the peer's delayed ACK (~40ms per response on loopback); fresh
+        # connections never showed it because close() flushes
+        disable_nagle_algorithm = True
 
         def setup(self) -> None:
             super().setup()
@@ -443,6 +482,10 @@ def _make_handler(server: MappingHTTPServer):
                 "uptime_seconds": server.obs.uptime_seconds(),
                 "started_unix": server.obs.started_unix,
                 "backend_names": sorted(server.service.backends()),
+                # the advertised load (same numbers the cluster view
+                # piggybacks) — lets external LBs and siblings read queue
+                # depth off the liveness probe
+                "load": server.router.load(),
             }
             if server.cluster is not None:
                 payload["cluster_nodes_up"] = \
@@ -521,18 +564,25 @@ def _make_handler(server: MappingHTTPServer):
                 raise ValueError("'stage' must be an integer")
             if self._maybe_forward(body, domain, model, stage):
                 return
-            res = server.service.derive(domain, model, stage)
+            if server.serve_delay > 0:  # chaos knob: an artificially slow
+                time.sleep(server.serve_delay)  # replica to route around
+            with server.router.track():
+                res = server.service.derive(domain, model, stage)
             self._send_json(200, pipeline.wire_from_result(res))
 
         def _maybe_forward(self, body: dict, domain: str, model: str,
                            stage: int) -> bool:
-            """Forward a derive this node does not own to its ring owner
-            (True = response already relayed).  At most one hop: forwarded
-            requests are marked and always served where they land.  A node
-            that already holds the record serves it regardless of ownership
-            — a local hit beats a network hop.  An unreachable owner
-            degrades to local derivation (the fleet may briefly hold an
-            extra copy; correctness never depends on placement)."""
+            """Forward a derive this node does not own to the *best* ring
+            owner (True = response already relayed).  At most one hop:
+            forwarded requests are marked and always served where they
+            land.  A node that already holds the record serves it
+            regardless of ownership — a local hit beats a network hop.
+            Owner order comes from the router's replica selector (EWMA
+            latency + advertised queue depth, epsilon-greedy), and the hop
+            runs through its bounded scheduler: a failed owner books a
+            retry, a full queue or blown TTL degrades to local derivation
+            (the fleet may briefly hold an extra copy; correctness never
+            depends on placement)."""
             cluster = server.cluster
             if cluster is None or self.headers.get(FORWARDED_HEADER):
                 return False
@@ -542,7 +592,9 @@ def _make_handler(server: MappingHTTPServer):
             store = server.service.store
             if store is not None and key in store:
                 return False  # resident locally: serve, don't hop
-            for owner in cluster.replica_peers(key):
+            candidates = cluster.replica_peers(key)
+
+            def hop(owner: str) -> tuple[int, bytes]:
                 req = urllib.request.Request(
                     f"{owner}/v1/derive", data=json.dumps(body).encode(),
                     method="POST",
@@ -555,20 +607,26 @@ def _make_handler(server: MappingHTTPServer):
                     with obs_trace.span("forward", owner=owner), \
                             urllib.request.urlopen(  # noqa: S310 — fleet URL
                                 req, timeout=server.forward_timeout) as resp:
-                        payload = resp.read()
-                        status = resp.status
+                        return resp.status, resp.read()
                 except urllib.error.HTTPError as e:
                     # the owner answered: relay its verdict (400/404/503…)
-                    payload = e.read()
-                    status = e.code
-                except (urllib.error.URLError, ConnectionError,
-                        TimeoutError, OSError):
-                    server.forward_errors += 1
-                    continue  # next replica, then local degradation
-                server.forwarded += 1
-                self._send_body(status, payload, "application/json")
-                return True
-            return False
+                    return e.code, e.read()
+
+            def on_error(owner: str, exc: Exception) -> None:
+                server.forward_errors += 1
+
+            with obs_trace.span("route_decision", key=key[:16],
+                                candidates=len(candidates),
+                                policy=server.router.policy) as span:
+                answer = server.router.dispatch(key, candidates, hop,
+                                                on_error=on_error)
+                span["forwarded"] = answer is not None
+            if answer is None:
+                return False  # every owner failed/shed: local degradation
+            status, payload = answer
+            server.forwarded += 1
+            self._send_body(status, payload, "application/json")
+            return True
 
         def _evaluate(self) -> None:
             """Batched map evaluation: mapped coordinates (or a BB

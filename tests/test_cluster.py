@@ -23,7 +23,7 @@ from repro.core.backends import MockLLMBackend
 from repro.core.store import PeerStore, build_store
 from repro.serving import (
     ClusterMembership, HashRing, MappingHTTPServer, MappingService,
-    RemoteMappingService, RemoteServiceError,
+    RemoteMappingService, RemoteServiceError, RendezvousHash, make_placement,
 )
 
 MODEL = "OSS:120b"
@@ -108,6 +108,69 @@ def test_ring_edge_shapes():
     assert len(ring) == 0 and "http://only:1" not in ring
 
 
+def test_weighted_ring_scales_keyspace_share():
+    """A node's weight scales its vnode count, so a weight-3 node owns
+    roughly 3x the primaries of a weight-1 sibling."""
+    nodes = [("http://small:1", 1.0), ("http://big:1", 3.0),
+             ("http://small2:1", 1.0)]
+    ring = HashRing(nodes, vnodes=128, replicas=2)
+    assert ring.weight("http://big:1") == 3.0
+    counts = {u: 0 for u, _ in nodes}
+    for key in _keys():
+        counts[ring.owners(key)[0]] += 1
+    # big's ideal share is 3/5 of the keyspace; smalls get 1/5 each
+    assert counts["http://big:1"] > 1.8 * counts["http://small:1"]
+    assert counts["http://big:1"] > 1.8 * counts["http://small2:1"]
+    # malformed weights clamp to 1.0 instead of corrupting the ring
+    clamped = HashRing([("http://a:1", -2.0), ("http://b:1", float("nan"))],
+                       vnodes=64, replicas=2)
+    assert clamped.weight("http://a:1") == 1.0
+    assert clamped.weight("http://b:1") == 1.0
+
+
+def test_rendezvous_placement_properties():
+    """Rendezvous hashing behind the same Placement interface: same
+    determinism/balance/minimal-disruption contract as the ring, plus the
+    weighted share."""
+    nodes = [f"http://node-{j}:80" for j in range(5)]
+    p1 = RendezvousHash(nodes, replicas=2)
+    p2 = RendezvousHash(list(reversed(nodes)), replicas=2)
+    counts = {u: 0 for u in nodes}
+    for key in _keys():
+        owners = p1.owners(key)
+        assert owners == p2.owners(key)
+        assert len(owners) == 2 and len(set(owners)) == 2
+        counts[owners[0]] += 1
+    ideal = N_KEYS / len(nodes)
+    assert max(counts.values()) <= 2 * ideal, counts
+    assert min(counts.values()) >= ideal / 2, counts
+
+    # minimal disruption: a leave only reassigns the leaver's keys
+    before = {k: p1.owners(k) for k in _keys()}
+    p1.remove(nodes[2])
+    for key, owners_a in before.items():
+        owners_b = p1.owners(key)
+        if nodes[2] not in owners_a:
+            assert owners_b == owners_a
+        else:
+            assert set(owners_b) >= set(owners_a) - {nodes[2]}
+    # weighted share
+    heavy = RendezvousHash([("http://small:1", 1.0), ("http://big:1", 3.0)],
+                           replicas=1)
+    primaries = sum(1 for k in _keys()
+                    if heavy.owners(k)[0] == "http://big:1")
+    assert primaries > N_KEYS * 0.6
+
+
+def test_make_placement_factory():
+    ring = make_placement("ring", ["http://a:1"], vnodes=8, replicas=2)
+    rdv = make_placement("rendezvous", ["http://a:1"], replicas=2)
+    assert isinstance(ring, HashRing) and isinstance(rdv, RendezvousHash)
+    assert ring.kind == "ring" and rdv.kind == "rendezvous"
+    with pytest.raises(ValueError):
+        make_placement("mulberry", ["http://a:1"])
+
+
 def test_peer_store_router_scopes_targets():
     """With a router attached, pulls/pushes address the key's owners — not
     the static broadcast list; an empty owner list means nobody, not
@@ -175,16 +238,21 @@ def counting_backend():
     return CountingBackend
 
 
-def boot_node(tmp_path, name: str, seeds, backend_factory, port: int = 0):
+def boot_node(tmp_path, name: str, seeds, backend_factory, port: int = 0,
+              weight: float = 1.0, gossip_fanout: int = 0,
+              placement: str = "ring", serve_delay: float = 0.0,
+              router=None):
     """One fleet node: service + HTTP frontend + membership (fast timers)."""
     svc = MappingService(store=build_store(root=tmp_path / name),
                          backend_factory=backend_factory,
                          n_validate=2000, sample_every=1)
-    server = MappingHTTPServer(svc, port=port).start()
+    server = MappingHTTPServer(svc, port=port, router=router,
+                               serve_delay=serve_delay).start()
     cluster = ClusterMembership(
         server.url, seeds=seeds, replicas=2, vnodes=64,
         heartbeat_interval=0.15, down_after=1.0, sync_interval=0.3,
-        probe_timeout=1.0)
+        probe_timeout=1.0, weight=weight, gossip_fanout=gossip_fanout,
+        placement=placement)
     server.attach_cluster(cluster)
     return server
 
@@ -361,6 +429,114 @@ def test_forwarded_requests_serve_where_they_land(tmp_path, counting_backend):
     finally:
         seed.close()
         other.close()
+
+
+# ---------------------------------------------------------------------------
+# Gossip fanout cap: big-fleet membership stays O(N log N)
+# ---------------------------------------------------------------------------
+
+
+def test_fanout_cap_and_probe_cycle_units():
+    """effective_fanout tiers (explicit / auto-log / uncapped) and the
+    shuffled probe cycle's coverage guarantee: every known node is visited
+    within ceil(N/fanout) rounds, never more than fanout per round."""
+    auto = ClusterMembership("http://self:1", seeds=[])
+    assert auto.effective_fanout(2) == 3    # ceil(log2 2) + 2
+    assert auto.effective_fanout(16) == 6
+    assert auto.effective_fanout(100) == 9
+    uncapped = ClusterMembership("http://self:1", seeds=[],
+                                 gossip_fanout=-1)
+    assert uncapped.effective_fanout(50) == 50
+    capped = ClusterMembership("http://self:1", seeds=[], gossip_fanout=3)
+    assert capped.effective_fanout(50) == 3
+
+    peers = {f"http://peer-{i}:1" for i in range(10)}
+    for url in sorted(peers):
+        capped.observe(url)
+    rounds = [capped._next_probe_targets() for _ in range(8)]
+    assert all(len(r) <= 3 for r in rounds)
+    # one full cycle = ceil(10/3) = 4 rounds and it covers everyone
+    assert set().union(*rounds[:4]) == peers
+    # deterministic under the node's own seed: a replay walks the same cycle
+    replay = ClusterMembership("http://self:1", seeds=[], gossip_fanout=3)
+    for url in sorted(peers):
+        replay.observe(url)
+    assert [replay._next_probe_targets() for _ in range(8)] == rounds
+
+
+def test_seven_node_fleet_capped_gossip_lifecycle(tmp_path,
+                                                 counting_backend):
+    """Satellite acceptance on a 7-node fleet with gossip_fanout=2: the
+    fleet converges through capped probe subsets; a killed node is marked
+    down fleet-wide within ``down_after`` + O(cycle) heartbeat rounds; a
+    partitioned node rejoins and the whole story costs ONE inference —
+    the rejoin must not re-derive."""
+    n = 7
+    seed = boot_node(tmp_path, "g0", [], counting_backend, gossip_fanout=2)
+    servers = [seed] + [
+        boot_node(tmp_path, f"g{i}", [seed.url], counting_backend,
+                  gossip_fanout=2)
+        for i in range(1, n)]
+    try:
+        _await(lambda: all(len(s.cluster.ring.nodes) == n for s in servers),
+               what="7-node convergence under capped gossip")
+        # steady state: every round respects the cap (bootstrap exempt)
+        time.sleep(0.5)
+        samples = []
+        for _ in range(6):
+            time.sleep(0.16)
+            samples += [s.cluster.stats()["probes_last_round"]
+                        for s in servers]
+        assert max(samples) <= 2, samples
+        assert all(s.cluster.stats()["gossip_fanout"] == 2 for s in servers)
+
+        # one derive through a non-owner: exactly one inference fleet-wide
+        key = servers[0].service.request_key("tri2d", MODEL, 20)
+        owners = servers[0].cluster.owners(key)
+        non_owner = next(s for s in servers if s.url not in owners)
+        RemoteMappingService(non_owner.url).derive("tri2d", MODEL, 20)
+        assert counting_backend.calls == 1
+        _await(lambda: sorted(holders(servers, key)) == sorted(owners),
+               what="record on exactly the K owners")
+
+        # -- kill a non-owner: down fleet-wide within down_after + O(cycle)
+        victim = next(s for s in servers
+                      if s.url not in owners and s is not non_owner)
+        victim_port, victim_name = victim.port, None
+        for i in range(n):
+            if servers[i] is victim:
+                victim_name = f"g{i}" if i else "g0"
+        victim.close()
+        alive = [s for s in servers if s is not victim]
+        t0 = time.monotonic()
+        _await(lambda: all(len(s.cluster.ring.nodes) == n - 1
+                           for s in alive),
+               what="capped-gossip death detection")
+        elapsed = time.monotonic() - t0
+        # down_after=1.0 + one probe cycle (ceil(6/2)=3 rounds @0.15s) +
+        # generous scheduling slack — the point: capping the fanout must
+        # not push detection toward the uncapped-timeout regime
+        assert elapsed < 1.0 + 3 * 0.15 + 3.0, elapsed
+
+        # -- the partitioned node rejoins on its old port + store ----------
+        rejoined = boot_node(tmp_path, victim_name, [seed.url],
+                             counting_backend, port=victim_port,
+                             gossip_fanout=2)
+        servers = alive + [rejoined]
+        _await(lambda: all(len(s.cluster.ring.nodes) == n for s in servers),
+               what="rejoin convergence")
+        # re-derive the same cell through several nodes: still ONE
+        # inference total — a rejoin must never duplicate work
+        for s in (rejoined, non_owner, servers[0]):
+            res = RemoteMappingService(s.url).derive("tri2d", MODEL, 20)
+            assert res.cache_key == key
+        assert counting_backend.calls == 1
+    finally:
+        for s in servers:
+            try:
+                s.close()
+            except Exception:
+                pass
 
 
 # ---------------------------------------------------------------------------

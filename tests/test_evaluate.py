@@ -86,6 +86,29 @@ def test_batch_groups_share_executables_and_match_direct_kernels():
     np.testing.assert_array_equal(results[5]["mask"], direct_mask)
 
 
+def test_padding_overhead_stays_nonnegative_when_groups_merge():
+    """Merged groups account the padded launch once PER member query.
+    Regression: a 3-way merge of 100/200/300-point queries used to count
+    the 384-point launch once against 600 requested points, reporting a
+    negative padding_overhead."""
+    ev = fresh_evaluator()
+    ev.evaluate_batch([
+        {"domain": "tri2d", "n_points": 100, "block_n": 128},
+        {"domain": "tri2d", "n_points": 200, "block_n": 128},
+        {"domain": "tri2d", "n_points": 300, "block_n": 128},
+    ])
+    stats = ev.stats.as_dict()
+    assert stats["points"] == 600
+    assert stats["padded_points"] >= stats["points"]
+    assert 0 <= stats["padding_overhead"] < 1
+
+    # and it stays a weighted average, not a reset, across batches
+    ev.evaluate({"domain": "gasket2d", "n_points": 256, "block_n": 128})
+    stats = ev.stats.as_dict()
+    assert stats["padded_points"] >= stats["points"]
+    assert 0 <= stats["padding_overhead"] < 1
+
+
 def test_repeat_batch_is_all_hits_and_lambda_range_equals_slice():
     ev = fresh_evaluator()
     first = ev.evaluate({"domain": "gasket2d", "n_points": 256,

@@ -2,6 +2,7 @@
 tracing across frontends/threads/nodes, and the loadgen/SLO harness."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 import urllib.error
@@ -574,6 +575,63 @@ def test_slo_report_and_check():
                               max_error_rate=0.1)
     assert len(violations) == 3
     assert lg.check_slo(report, 1000.0, 0.5, 0.5) == []
+
+
+def test_ramp_finds_knee_and_bounds_accepted_p99():
+    """The ramp steps the offered rate geometrically, stops at the first
+    shedding step, calls the last shed-free step the knee, and reports the
+    p99 of accepted requests only — sheds must not pollute the latency
+    bound they exist to protect."""
+    lg = _loadgen()
+
+    def fake_runner(urls, spec):
+        capacity = 100.0  # the fleet "sheds" past this offered rate
+        n = spec.requests
+        sheds = int(n * 0.3) if spec.rate > capacity else 0
+        records = []
+        for i in range(n):
+            shed = i < sheds
+            records.append({"op": "derive", "ok": not shed, "shed": shed,
+                            "seconds": 0.001 if shed else 0.020,
+                            "wall_seconds": 1.0})
+        return records, lg.slo_report(records, spec)
+
+    report = lg.ramp(["http://x"], lg.LoadSpec(requests=50),
+                     start_rate=25.0, step_factor=2.0, max_steps=8,
+                     runner=fake_runner)
+    assert [s["offered_rps"] for s in report["steps"]] \
+        == [25.0, 50.0, 100.0, 200.0]
+    assert report["saturated"]
+    assert report["steps"][-1]["sheds"] > 0
+    assert report["knee_offered_rps"] == 100.0
+    assert report["knee_goodput_rps"] == pytest.approx(50.0)
+    # accepted p99 excludes the 1ms sheds on the saturated step
+    assert report["accepted_p99_ms"] == pytest.approx(20.0)
+
+    # a fleet that never sheds reports an unsaturated ramp, knee at the top
+    calm = lg.ramp(["http://x"], lg.LoadSpec(requests=20),
+                   start_rate=10.0, step_factor=2.0, max_steps=3,
+                   runner=lambda u, s: fake_runner(
+                       u, dataclasses.replace(s, rate=1.0)))
+    assert not calm["saturated"]
+    assert len(calm["steps"]) == 3
+    assert calm["knee_offered_rps"] == 40.0
+
+
+def test_ramp_live_smoke(tmp_path):
+    """End-to-end ramp against one live node: well-formed steps whether or
+    not the node saturates at these tiny rates."""
+    lg = _loadgen()
+    spec = lg.LoadSpec(requests=20, concurrency=4, cells=4,
+                       mix={"derive": 1.0})
+    with AsyncMappingHTTPServer(make_service(tmp_path)) as server:
+        report = lg.ramp([server.url], spec, start_rate=200.0, max_steps=2)
+    assert 1 <= len(report["steps"]) <= 2
+    assert report["accepted_p99_ms"] > 0.0
+    for step in report["steps"]:
+        assert step["accepted"] + step["sheds"] + step["errors"] \
+            >= spec.requests - step["errors"]
+        assert step["goodput_rps"] <= step["achieved_rps"] + 1e-9
 
 
 def test_loadgen_replay_against_live_node(tmp_path):
