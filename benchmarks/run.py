@@ -31,13 +31,14 @@ def main() -> None:
     p.add_argument("--full", action="store_true",
                    help="validate at the paper's 10^6 points (slower)")
     p.add_argument("--only", default=None,
-                   help="accuracy|fig5|dense|fractal|attn|msimplex|serving"
-                        "|cluster|routing|evaluate|concurrency"
-                        "|observability|loadgen")
+                   help="comma-separated subset of: accuracy|fig5|dense"
+                        "|fractal|attn|msimplex|serving|cluster|routing"
+                        "|evaluate|wire|concurrency|observability|loadgen")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write a machine-readable per-suite report "
                         "(e.g. BENCH_serving.json)")
     args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
 
     n_val = 1_000_000 if args.full else 100_000
     sample = 200 if args.full else 50
@@ -61,13 +62,14 @@ def main() -> None:
         "cluster": serving.cluster_suite,
         "routing": serving.routing_suite,
         "evaluate": serving.evaluate_suite,
+        "wire": serving.wire_suite,
         "concurrency": serving.concurrency_suite,
         "observability": serving.observability_suite,
         "loadgen": serving.loadgen_suite,
     }
     report: dict = {"suites": {}, "args": {"full": args.full}}
     for name, fn in suites.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         rows_before = len(common.ROWS)
         cache_before = _cache_counts()
@@ -92,6 +94,7 @@ def main() -> None:
                                  or "cluster" in report["suites"]
                                  or "routing" in report["suites"]
                                  or "evaluate" in report["suites"]
+                                 or "wire" in report["suites"]
                                  or "concurrency" in report["suites"]
                                  or "observability" in report["suites"]
                                  or "loadgen" in report["suites"]):

@@ -39,6 +39,19 @@ plane added in PR 6:
     projection from ``core/energy.py`` (an idealized lower bound; the
     ratio is recorded, not optimized).
 
+The wire sub-suite (``--only wire``) measures what the PR 10 binary wire
+format buys the evaluation hot path:
+
+  * codec-level — encode+decode round-trip of one evaluation result at
+    1k/100k/1M points, JSON (``wire_result``/``hydrate_result``) vs the
+    binary frame (``wire.encode_frame``/``decode_frame``, zero-copy
+    ``np.frombuffer`` hydration), with payload sizes;
+  * end-to-end — served p50 for the same queries over the async
+    frontend, one keep-alive client per format (acceptance: binary
+    >= 3x JSON at 100k points, byte-identical decoded arrays);
+  * warm single-query served p50 over binary wire — the request-plane
+    floor a compiled-executable hit actually ships under.
+
 The concurrency sub-suite (``--only concurrency``) races the two frontends
 added across PR 1-7 head to head:
 
@@ -645,6 +658,168 @@ def evaluate_suite(n_warm: int = 30, n_loops: int = 3) -> dict:
           f"in {groups} groups {batch_speedup:.1f}x faster than the loop; "
           f"measured/roofline per-block {ev['roofline']['ratio']:.0f}x)")
     return ev
+
+
+def wire_suite(reps: int = 9, n_single: int = 100) -> dict:
+    """Binary vs JSON evaluation wire: codec-level encode+decode cost,
+    end-to-end served p50 at 1k/100k/1M points, and the warm single-query
+    served p50 (the number the compiled-executable win was drowning under
+    JSON).  Asserts binary end-to-end >= 3x JSON on the 100k row with
+    byte-identical decoded arrays."""
+    header("serving: wire (binary vs JSON evaluation framing)")
+    import json
+
+    import numpy as np
+
+    from repro.core import compile_cache as cc
+    from repro.serving import wire
+    from repro.serving.evaluate import (
+        EvaluationService, hydrate_result, wire_result,
+    )
+    from benchmarks.common import timed
+
+    sizes = (1_000, 100_000, 1_000_000)
+    local = EvaluationService(compile_cache=cc.CompileCache(max_entries=16))
+    codec: dict = {}
+    for n in sizes:
+        res = local.evaluate({"domain": "tri2d", "n_points": n})
+        blob_j = json.dumps(wire_result(res), default=str).encode()
+        blob_b = wire.encode_frame(res)
+        back_j = hydrate_result(json.loads(blob_j))
+        back_b = wire.decode_frame(blob_b)
+        # byte-identity: both framings return exactly what was computed
+        np.testing.assert_array_equal(back_b["coords"], res["coords"])
+        np.testing.assert_array_equal(back_j["coords"], res["coords"])
+        assert back_b["coords"].dtype == res["coords"].dtype
+        assert back_j["coords"].dtype == res["coords"].dtype
+        _, je = timed(lambda r=res: json.dumps(
+            wire_result(r), default=str).encode())
+        _, jd = timed(lambda b=blob_j: hydrate_result(json.loads(b)))
+        _, be = timed(lambda r=res: wire.encode_frame(r))
+        _, bd = timed(lambda b=blob_b: wire.decode_frame(b))
+        emit(f"wire_codec_json_{n}", je + jd, f"{len(blob_j)}B")
+        emit(f"wire_codec_bin_{n}", be + bd, f"{len(blob_b)}B")
+        codec[n] = {"json_us": je + jd, "bin_us": be + bd,
+                    "json_bytes": len(blob_j), "bin_bytes": len(blob_b),
+                    "codec_speedup": (je + jd) / (be + bd)}
+
+    # -- end-to-end over the async frontend (the default serving shape) ----
+    service = MappingService(store=None)
+    e2e: dict = {}
+    with AsyncMappingHTTPServer(service) as server:
+        cli_b = RemoteMappingService(server.url)
+        cli_j = RemoteMappingService(server.url, binary=False)
+        for n in sizes:
+            reps_n = reps if n < 1_000_000 else 3
+            p50s = {}
+            for name, cli in (("json", cli_j), ("bin", cli_b)):
+                cli.evaluate("tri2d", n_points=n)  # warm: compile + blob LRU
+                xs = []
+                for _ in range(reps_n):
+                    t0 = time.perf_counter()
+                    got = cli.evaluate("tri2d", n_points=n)
+                    xs.append(time.perf_counter() - t0)
+                xs.sort()
+                p50s[name] = xs[len(xs) // 2]
+                p50s[name + "_res"] = got
+            np.testing.assert_array_equal(p50s["bin_res"]["coords"],
+                                          p50s["json_res"]["coords"])
+            assert p50s["bin_res"]["coords"].dtype == \
+                p50s["json_res"]["coords"].dtype
+            emit(f"wire_e2e_json_{n}", p50s["json"] * 1e6, "p50")
+            emit(f"wire_e2e_bin_{n}", p50s["bin"] * 1e6, "p50")
+            e2e[n] = {"json_p50_us": p50s["json"] * 1e6,
+                      "bin_p50_us": p50s["bin"] * 1e6,
+                      "speedup": p50s["json"] / p50s["bin"]}
+        # warm single-query served p50: one typical-size query on a hot
+        # keep-alive connection, binary wire, measured at the socket (a
+        # prebuilt request + minimal response parse) so the number is the
+        # server's turnaround + binary decode — the request-plane floor a
+        # compiled-executable hit actually ships under.  http.client's own
+        # header-parsing tax lands in the pooled-client row next to it.
+        single_p50 = _raw_single_p50(server.host, server.port, n_single)
+        emit("wire_single_warm_p50", single_p50, "bin+socket")
+        singles = []
+        for _ in range(n_single):
+            t0 = time.perf_counter()
+            cli_b.evaluate("tri2d", n_points=1024)
+            singles.append(time.perf_counter() - t0)
+        singles.sort()
+        client_p50 = singles[len(singles) // 2] * 1e6
+        emit("wire_single_client_p50", client_p50, "bin+pooled")
+        metrics = cli_b.metrics()
+        cli_b.close()
+        cli_j.close()
+    speedup_100k = e2e[100_000]["speedup"]
+    assert speedup_100k >= 3, (
+        f"binary only {speedup_100k:.2f}x faster than JSON at 100k points "
+        "(need >= 3x)")
+    out = {
+        "codec": codec,
+        "e2e": e2e,
+        "speedup_100k": speedup_100k,
+        "single_warm_p50_us": single_p50,
+        "single_client_p50_us": client_p50,
+        "eval_wire_cache": metrics.get("evaluate_wire"),
+        "aio": metrics.get("aio"),
+    }
+    LAST_METRICS["wire"] = out
+    print(f"(100k e2e: JSON {e2e[100_000]['json_p50_us'] / 1e3:.1f}ms vs "
+          f"binary {e2e[100_000]['bin_p50_us'] / 1e3:.2f}ms = "
+          f"{speedup_100k:.1f}x; 1M e2e "
+          f"{e2e[1_000_000]['speedup']:.1f}x; warm single-query served p50 "
+          f"{single_p50:.0f}us, {client_p50:.0f}us through the pooled "
+          "client)")
+    return out
+
+
+def _raw_single_p50(host: str, port: int, n: int,
+                    n_points: int = 1024) -> float:
+    """Served p50 (us) for one warm binary evaluate on a hot keep-alive
+    socket: prebuilt request bytes in, status line + headers + body out,
+    ``wire.decode_frame`` on the payload.  Asserts the timed responses
+    come off the compiled-executable cache."""
+    import json
+    import socket
+
+    from repro.serving import wire
+
+    body = json.dumps({"domain": "tri2d", "n_points": n_points}).encode()
+    req = (b"POST /v1/evaluate HTTP/1.1\r\nHost: bench\r\n"
+           b"Content-Type: application/json\r\n"
+           b"Accept: " + wire.CONTENT_TYPE.encode() + b"\r\n"
+           b"Content-Length: " + str(len(body)).encode() + b"\r\n\r\n"
+           + body)
+    sock = socket.create_connection((host, port))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    reader = sock.makefile("rb")
+
+    def once() -> bytes:
+        sock.sendall(req)
+        clen = 0
+        reader.readline()  # status line
+        while True:
+            line = reader.readline()
+            if line in (b"\r\n", b""):
+                break
+            if line.lower().startswith(b"content-length:"):
+                clen = int(line.split(b":", 1)[1])
+        return reader.read(clen)
+
+    try:
+        once()  # compile + wire-LRU warmup
+        wire.decode_frame(once())
+        xs = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            res = wire.decode_frame(once())
+            xs.append((time.perf_counter() - t0) * 1e6)
+        assert res["executable"] == "hit"
+    finally:
+        reader.close()
+        sock.close()
+    xs.sort()
+    return xs[len(xs) // 2]
 
 
 def _hammer(server, n_conns: int, per_conn: int) -> dict:

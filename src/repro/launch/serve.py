@@ -179,17 +179,21 @@ def serve_maps(args) -> None:
     router = _router_from_args(args)
     serve_delay = _pick(_env("REPRO_SLOW_SERVE", args.slow_serve, float),
                         0.0)
+    wire_entries = _pick(_env("REPRO_WIRE_CACHE_ENTRIES",
+                              args.wire_cache_entries, int), 256)
     if args.use_async:
         server = AsyncMappingHTTPServer(
             service, host=args.host, port=args.port,
             max_pending=args.max_pending,
             observability=args.observability,
-            router=router, serve_delay=serve_delay)
+            router=router, serve_delay=serve_delay,
+            wire_cache_entries=wire_entries)
         server.start()  # bind + loop up before cluster membership probes
     else:
         server = MappingHTTPServer(service, host=args.host, port=args.port,
                                    observability=args.observability,
-                                   router=router, serve_delay=serve_delay)
+                                   router=router, serve_delay=serve_delay,
+                                   wire_cache_entries=wire_entries)
     cluster = _cluster_from_args(args, server)
     store = service.store
     if store is None:
@@ -215,6 +219,9 @@ def serve_maps(args) -> None:
     else:
         print(f"compile cache: {cc.max_entries} entries, "
               f"persist={cc.persist_dir or 'off'}")
+    print(f"evaluate wire: binary framing via 'Accept: "
+          f"application/x-repro-binary' or ?format=binary, "
+          f"response LRU={wire_entries} entries")
     if cluster is not None:
         print(f"cluster: self={cluster.self_url} replicas="
               f"{cluster.replicas} vnodes={cluster.vnodes} "
@@ -349,6 +356,10 @@ def main() -> None:
                         "server skips re-tracing (best effort — falls back "
                         "to in-memory when the jaxlib can't round-trip) "
                         "[REPRO_COMPILE_CACHE_DIR]")
+    p.add_argument("--wire-cache-entries", type=int, default=None,
+                   help="encoded evaluate-response LRU capacity (binary and "
+                        "JSON blobs; 0 disables; default 256) "
+                        "[REPRO_WIRE_CACHE_ENTRIES]")
     # consistent-hash sharded fleet (see serving/cluster.py); every flag
     # falls back to its REPRO_CLUSTER_* env var
     p.add_argument("--cluster-seed", default=None, metavar="URL[,URL...]",

@@ -10,7 +10,10 @@ ring placement, membership heartbeats, anti-entropy repair), and the
 batched map *evaluation* hot path (``evaluate``: compiled-executable
 groups behind ``POST /v1/evaluate``), and the load-aware request router
 (``router``: bounded FIFO + retry lane, EWMA-latency/queue-depth replica
-selection with epsilon-greedy exploration).  Both frontends carry the
+selection with epsilon-greedy exploration), and the binary evaluation
+wire codec (``wire``: zero-copy array framing negotiated via ``Accept:
+application/x-repro-binary``, plus the encoded-response LRU both
+frontends serve warm evaluates from).  Both frontends carry the
 observability plane (``repro.obs``): per-request traces
 (``X-Repro-Trace-Id`` -> ``GET /v1/trace/<id>``) and a metrics registry
 served as JSON and Prometheus text (``GET /metrics?format=prometheus``).
@@ -36,4 +39,7 @@ from repro.serving.http import MappingHTTPServer  # noqa: F401
 from repro.serving.map_service import MappingService, ServiceStats  # noqa: F401
 from repro.serving.router import (  # noqa: F401
     ReplicaSelector, RequestQueue, RequestRouter, RouterStats,
+)
+from repro.serving.wire import (  # noqa: F401
+    WireCache, WireFormatError, decode_frame, encode_frame,
 )

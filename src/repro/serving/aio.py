@@ -45,6 +45,7 @@ from repro.core.backends import LLMBusyError
 from repro.core.domains import DOMAINS
 from repro.obs import Observability
 from repro.obs import trace as obs_trace
+from repro.serving import wire
 from repro.serving.http import (
     FORWARDED_HEADER,
     MAX_BODY_BYTES,
@@ -173,6 +174,11 @@ class AsyncMappingHTTPServer:
         self._wire_cache: "collections.OrderedDict[tuple, tuple[str, bytes]]" \
             = collections.OrderedDict()
         self._wire_cache_entries = wire_cache_entries
+        #: encoded evaluate responses (binary or JSON), keyed by resolved
+        #: executable group + λ-range — warm hits serve inline on the loop
+        self.eval_wire = wire.WireCache(entries=wire_cache_entries)
+        self.eval_wire_hits = 0   # evaluates served inline off eval_wire
+        self._eval_served = False  # first evaluate (jax import) completed
         self._evaluator = None
         self._evaluator_mu = threading.Lock()
         self._executor = concurrent.futures.ThreadPoolExecutor(
@@ -319,13 +325,14 @@ class AsyncMappingHTTPServer:
             self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
             evaluator=evaluator, frontend=self.obs.frontend_dict(),
-            router=self.router)
+            router=self.router, eval_wire=self.eval_wire)
         # event-loop frontend counters ride inside the shared "frontend"
         # section (parity with the threaded server's key set) and stay
         # aliased at the legacy top-level "aio" key for existing consumers
         out["frontend"]["aio"] = out["aio"] = {
             "fast_hits": self.fast_hits,
             "wire_hits": self.wire_hits,
+            "eval_wire_hits": self.eval_wire_hits,
             "offloaded": self.offloaded,
             "shed": self.shed,
             "stream_stalls": self.stream_stalls,
@@ -517,7 +524,7 @@ class AsyncMappingHTTPServer:
         elif method == "POST":
             if path == "/v1/derive":
                 return "derive", self._derive
-            if path == "/v1/evaluate":
+            if path == "/v1/evaluate" or path.startswith("/v1/evaluate?"):
                 return "evaluate", self._evaluate
             if path == "/v1/grid":
                 return "grid", self._grid
@@ -672,6 +679,8 @@ class AsyncMappingHTTPServer:
                          "(REPRO_ARTIFACT_CACHE=off)", "key": key})
             return
         self._wire_invalidate(key)
+        # cached evaluate responses embedding this artifact die with it
+        self.eval_wire.invalidate_artifact(key)
         if await self._offload(store.delete, key, admitted=False):
             await conn.send_json(200, {"key": key, "deleted": True})
         else:
@@ -821,30 +830,117 @@ class AsyncMappingHTTPServer:
     async def _evaluate(self, conn: _Conn) -> None:
         from repro.serving import evaluate as ev
 
-        body = conn.body()
+        ctype = conn.headers.get("content-type")
+        if wire.is_binary(ctype):
+            # binary-framed request body: WireFormatError (a ValueError)
+            # surfaces as a structured 400 through _dispatch's map_error
+            body = wire.decode_request(conn.raw)
+        else:
+            body = conn.body()
+        binary = wire.wants_binary(conn.headers.get("accept"),
+                                   conn.path, ctype)
         evaluator = self.evaluator
         sweep = body.get("sweep")
         if sweep is not None:
             if not isinstance(sweep, dict):
                 raise ValueError("'sweep' must be a JSON object")
-            await self._evaluate_sweep(conn, evaluator, sweep)
+            await self._evaluate_sweep(conn, evaluator, sweep, binary)
             return
         queries = body.get("queries")
-        if queries is not None:
-            if not isinstance(queries, list):
-                raise ValueError("'queries' must be a list")
-            results, meta = await self._offload(
-                evaluator.evaluate_batch, queries)
-            await conn.send_json(200, {
-                "results": [ev.wire_result(r) for r in results],
-                "batch": meta,
-            })
+        if queries is not None and not isinstance(queries, list):
+            raise ValueError("'queries' must be a list")
+        single = queries is None
+        batch = [body] if single else queries
+        response_type = wire.CONTENT_TYPE if binary else "application/json"
+        # hot path, entirely on the event loop: once the batch's executable
+        # identity is resolvable (dict lookups + arithmetic when the
+        # artifact store is warm), a cached encoded response sends with no
+        # thread handoff and no re-serialization — the evaluate analogue of
+        # the derive fast path above.  Gated on one completed evaluate:
+        # planning imports jax/kernels, and that first multi-second import
+        # belongs on the worker pool, not the loop.
+        if self._eval_served:
+            identity = evaluator.batch_cache_key(batch)
+            if identity is not None:
+                cell = ("bin" if binary else "json",
+                        "single" if single else "batch", identity[0])
+                blob = self.eval_wire.get(cell,
+                                          evaluator.cache_generation())
+                if blob is not None:
+                    self.eval_wire_hits += 1
+                    await conn.send_bytes(200, blob,
+                                          content_type=response_type)
+                    return
+        if await self._maybe_forward_evaluate(conn, body, batch, binary):
             return
-        result = await self._offload(evaluator.evaluate, body)
-        await conn.send_json(200, ev.wire_result(result))
+        blob = await self._offload(
+            lambda: ev.encoded_batch_response(
+                evaluator, self.eval_wire, batch,
+                single=single, binary=binary))
+        self._eval_served = True
+        await conn.send_bytes(200, blob, content_type=response_type)
+
+    async def _maybe_forward_evaluate(self, conn: _Conn, body: dict,
+                                      queries: list, binary: bool) -> bool:
+        """One-hop forward for artifact-key evaluates this node neither
+        owns nor holds (the owner has the artifact and its executables
+        warm).  The owner's bytes and Content-Type relay verbatim — binary
+        passthrough, never re-encoded.  Same policy as the threaded
+        frontend; the blocking hop rides the worker pool."""
+        cluster = self.cluster
+        if cluster is None or conn.headers.get(FORWARDED_HEADER.lower()):
+            return False
+        keys = {q.get("key") for q in queries if isinstance(q, dict)}
+        keys.discard(None)
+        if len(keys) != 1:
+            return False
+        key = keys.pop()
+        if not isinstance(key, str) or not store_mod.valid_key(key):
+            return False  # the evaluator raises the structured 400
+        if cluster.owns(key):
+            return False
+        store = self.service.store
+        if store is not None and key in store:
+            return False
+        candidates = cluster.replica_peers(key)
+        accept = wire.CONTENT_TYPE if binary else "application/json"
+
+        def attempt(owner: str) -> tuple[int, bytes, str]:
+            req = urllib.request.Request(
+                f"{owner}/v1/evaluate", data=json.dumps(body).encode(),
+                method="POST",
+                headers={"Content-Type": "application/json",
+                         "Accept": accept,
+                         FORWARDED_HEADER: "1",
+                         **obs_trace.wire_headers()})
+            try:
+                with obs_trace.span("forward_evaluate", owner=owner), \
+                        urllib.request.urlopen(  # noqa: S310 — fleet URL
+                            req, timeout=self.forward_timeout) as resp:
+                    return (resp.status, resp.read(),
+                            resp.headers.get("Content-Type")
+                            or "application/json")
+            except urllib.error.HTTPError as e:
+                return (e.code, e.read(),
+                        e.headers.get("Content-Type") or "application/json")
+
+        def on_error(owner: str, exc: Exception) -> None:
+            self.forward_errors += 1
+
+        def hop() -> tuple[int, bytes, str] | None:
+            return self.router.dispatch(key, candidates, attempt,
+                                        on_error=on_error)
+
+        relayed = await self._offload(hop)
+        if relayed is None:
+            return False  # every owner failed: serve (404) locally
+        self.forwarded += 1
+        status, payload, ctype = relayed
+        await conn.send_bytes(status, payload, content_type=ctype)
+        return True
 
     async def _evaluate_sweep(self, conn: _Conn, evaluator,
-                              sweep: dict) -> None:
+                              sweep: dict, binary: bool = False) -> None:
         from repro.serving import evaluate as ev
 
         domains = sweep.get("domains")
@@ -857,6 +953,12 @@ class AsyncMappingHTTPServer:
             domains, sizes, tier=sweep.get("tier", "map"),
             block_n=sweep.get("block_n"),
             interpret=sweep.get("interpret"))
+        if binary:
+            await self._stream(
+                conn, cells,
+                lambda res: wire.stream_chunk(wire.encode_frame(res)),
+                wire.STREAM_CONTENT_TYPE)
+            return
         await self._stream_ndjson(conn, cells, ev.wire_result)
 
     # -- streaming -----------------------------------------------------------
@@ -876,17 +978,25 @@ class AsyncMappingHTTPServer:
         cells = self.service.run_grid(domains, models, stages)
         await self._stream_ndjson(conn, cells, pipeline.wire_from_result)
 
-    async def _stream_ndjson(self, conn: _Conn, cells, wire) -> None:
-        """Pull-driven NDJSON stream with real backpressure: the producer
-        (a blocking generator) is advanced one cell per loop turn on the
-        worker pool, and each line is followed by ``await drain()`` — once a
-        slow reader's write buffer passes the high-water mark, production
-        for *that* connection pauses until the client reads.  Other
-        connections keep being served; nothing is buffered beyond the
-        transport's ``stream_buffer_bytes``."""
+    async def _stream_ndjson(self, conn: _Conn, cells, wire_fn) -> None:
+        await self._stream(
+            conn, cells,
+            lambda res: (json.dumps(wire_fn(res)) + "\n").encode(),
+            "application/x-ndjson")
+
+    async def _stream(self, conn: _Conn, cells, encode,
+                      content_type: str) -> None:
+        """Pull-driven close-delimited stream with real backpressure:
+        the producer (a blocking generator) is advanced one cell per loop
+        turn on the worker pool, and each cell's bytes (an NDJSON line or
+        a length-prefixed binary frame — ``encode`` decides) are followed
+        by ``await drain()`` — once a slow reader's write buffer passes
+        the high-water mark, production for *that* connection pauses until
+        the client reads.  Other connections keep being served; nothing is
+        buffered beyond the transport's ``stream_buffer_bytes``."""
         conn.responded = True
         conn.keep_alive = False  # length unknowable: close-delimited
-        conn.writer.write(_head(200, "application/x-ndjson", None, True))
+        conn.writer.write(_head(200, content_type, None, True))
         loop = asyncio.get_running_loop()
         stalled = False
         # one context snapshot for the whole stream: every generator step
@@ -899,7 +1009,7 @@ class AsyncMappingHTTPServer:
                     self._executor, ctx.run, next, cells, _SENTINEL)
                 if res is _SENTINEL:
                     break
-                conn.writer.write((json.dumps(wire(res)) + "\n").encode())
+                conn.writer.write(encode(res))
                 t0 = time.monotonic()
                 await conn.writer.drain()  # the backpressure point
                 if not stalled and \
@@ -911,8 +1021,7 @@ class AsyncMappingHTTPServer:
         except Exception as e:  # noqa: BLE001 — headers are gone
             try:
                 conn.writer.write(
-                    (json.dumps({"error": f"{type(e).__name__}: {e}"}) +
-                     "\n").encode())
+                    encode({"error": f"{type(e).__name__}: {e}"}))
                 await conn.writer.drain()
             except (BrokenPipeError, ConnectionResetError):
                 pass

@@ -152,9 +152,12 @@ class _Response:
         self._resp = resp
         self._closed = False
         self.status = resp.status
+        #: what the server actually sent — the client's binary-vs-JSON
+        #: dispatch point (an old server ignores Accept and answers JSON)
+        self.content_type = resp.getheader("Content-Type", "") or ""
 
-    def read(self) -> bytes:
-        return self._resp.read()
+    def read(self, amt: int | None = None) -> bytes:
+        return self._resp.read() if amt is None else self._resp.read(amt)
 
     def readline(self) -> bytes:
         return self._resp.readline()
@@ -192,12 +195,18 @@ class RemoteMappingService:
         backoff: float = 0.1,
         fallback: MappingService | Callable[[], MappingService] | None = None,
         keep_alive: bool = True,
+        binary: bool = True,
     ):
         self.url = url.rstrip("/")
         self.timeout = timeout
         self.retries = retries
         self.backoff = backoff
         self.keep_alive = keep_alive
+        #: negotiate the binary evaluate wire (Accept:
+        #: application/x-repro-binary); an older server answers JSON and
+        #: the client parses whatever Content-Type actually came back, so
+        #: this is a preference, never a compatibility break
+        self.binary = binary
         self.stats = ClientStats()
         self._fallback = fallback
         self._fallback_service: MappingService | None = None
@@ -543,12 +552,23 @@ class RemoteMappingService:
     def evaluate_batch(self, queries: Sequence[dict]) -> list[dict]:
         """POST /v1/evaluate with a heterogeneous query batch: one HTTP
         round-trip, server-side executable grouping, results in query
-        order (``coords``/``mask`` hydrated to numpy arrays)."""
-        from repro.serving import evaluate as ev
+        order (``coords``/``mask`` hydrated to numpy arrays).
 
+        With ``binary=True`` (the default) the request carries ``Accept:
+        application/x-repro-binary`` and a binary-speaking server answers
+        raw little-endian frames, hydrated zero-copy via ``np.frombuffer``
+        with the exact dtype/shape the server computed.  An older server
+        ignores the header and answers JSON — detected from the response
+        Content-Type, parsed through the unchanged JSON path."""
+        from repro.serving import evaluate as ev
+        from repro.serving import wire
+
+        headers = {"Accept": wire.CONTENT_TYPE} if self.binary else None
         try:
-            payload = self._call_json("/v1/evaluate",
-                                      {"queries": list(queries)})
+            with self._attempts("/v1/evaluate", {"queries": list(queries)},
+                                headers=headers) as resp:
+                ctype = resp.content_type
+                raw = resp.read()
         except RemoteServiceError as e:
             local = self._local_eval()
             if local is None or not _falls_back(e):
@@ -556,15 +576,29 @@ class RemoteMappingService:
             self.stats.fallbacks += 1
             results, _ = local.evaluate_batch(list(queries))
             return results
+        self.stats.remote_requests += 1
+        if wire.is_binary(ctype):
+            payload = wire.decode_frame(raw)
+            if not isinstance(payload, dict):
+                raise RemoteServiceError(
+                    "/v1/evaluate answered a non-object binary frame")
+            return list(payload.get("results", []))
+        payload = json.loads(raw)
         return [ev.hydrate_result(r) for r in payload.get("results", [])]
 
     def evaluate_sweep(self, domains: Sequence[str], sizes: Sequence[int],
                        tier: str = "map", block_n: int | None = None,
                        interpret: bool | None = None) -> Iterator[dict]:
         """Streamed evaluation sweep over (domain × n_points): one hydrated
-        result per NDJSON line, as the server resolves cells (the /v1/grid
-        framing, applied to the evaluation plane)."""
+        result per stream cell, as the server resolves them (the /v1/grid
+        close-delimited framing, applied to the evaluation plane).
+
+        With ``binary=True`` the request asks for the length-prefixed
+        binary frame stream and each cell hydrates via ``np.frombuffer``;
+        an older server streams NDJSON instead, which the Content-Type
+        check routes through the unchanged line parser."""
         from repro.serving import evaluate as ev
+        from repro.serving import wire
 
         sweep: dict = {"domains": list(domains), "sizes": list(sizes),
                        "tier": tier}
@@ -572,8 +606,11 @@ class RemoteMappingService:
             sweep["block_n"] = block_n
         if interpret is not None:
             sweep["interpret"] = interpret
+        headers = {"Accept": wire.STREAM_CONTENT_TYPE} if self.binary \
+            else None
         try:
-            resp = self._attempts("/v1/evaluate", {"sweep": sweep})
+            resp = self._attempts("/v1/evaluate", {"sweep": sweep},
+                                  headers=headers)
         except RemoteServiceError as e:
             local = self._local_eval()
             if local is None or not _falls_back(e):
@@ -584,6 +621,19 @@ class RemoteMappingService:
             return
         with resp:
             self.stats.remote_requests += 1
+            if wire.is_binary(resp.content_type):
+                try:
+                    for payload in wire.iter_stream(resp.read):
+                        if isinstance(payload, dict) and "error" in payload \
+                                and "tier" not in payload:
+                            raise RemoteServiceError(
+                                "/v1/evaluate failed mid-stream: "
+                                f"{payload['error']}")
+                        yield payload
+                except _TRANSPORT_ERRORS as e:
+                    raise RemoteServiceError(
+                        f"/v1/evaluate stream broke mid-sweep: {e}") from e
+                return
             while True:
                 try:
                     raw = resp.readline()

@@ -39,6 +39,7 @@ run the registry's ground-truth geometry.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 from typing import Callable, Iterable, Iterator, Sequence
 
@@ -115,6 +116,13 @@ class _Plan:
         # contains every narrower member's answer
         return (self.fingerprint, "map", self.start, self.block_n,
                 self.interpret)
+
+    @property
+    def wire_key(self) -> tuple:
+        """The full answer identity (group identity + this member's exact
+        λ-range/extent) — what a cached wire blob is keyed by.  Two queries
+        with equal wire keys get byte-identical responses."""
+        return (*self.group_key, self.n_points, self.start)
 
 
 class EvaluationService:
@@ -272,7 +280,10 @@ class EvaluationService:
             out = np.asarray(out_dev)
             for p in members:
                 if p.tier == "membership":
-                    data = {"mask": out[0, :p.n_points]}
+                    # the kernel's int32 0/1 column is logically boolean —
+                    # publish it as bool_ (1 byte/cell on the wire) and let
+                    # the dtype ride the payload so clients round-trip it
+                    data = {"mask": out[0, :p.n_points].astype(np.bool_)}
                 else:
                     data = {"coords": out[:p.domain.dim, :p.n_points].T}
                 results[p.index] = {
@@ -314,6 +325,31 @@ class EvaluationService:
         """Single-query form of :meth:`evaluate_batch`."""
         results, _ = self.evaluate_batch([query])
         return results[0]
+
+    # -- wire-cache identity -------------------------------------------------
+    def batch_cache_key(self, queries: Sequence[dict]
+                        ) -> tuple[tuple, tuple[str, ...]] | None:
+        """``(batch identity, artifact keys)`` for the frontends' encoded-
+        response LRU: per member the resolved executable group plus the
+        exact λ-range/extent, so equal keys guarantee byte-identical
+        answers.  ``None`` when any query fails admission — the caller
+        falls through to :meth:`evaluate_batch`, which raises the
+        authoritative (400/404) error.  Planning is pure resolution (dict
+        lookups + arithmetic, no dispatch), cheap enough for a hot path."""
+        try:
+            plans = [self._plan(i, q) for i, q in enumerate(queries)]
+        except Exception:  # noqa: BLE001 — identity only, never authoritative
+            return None
+        arts = sorted({p.fingerprint.split(":", 1)[1] for p in plans
+                       if p.fingerprint.startswith("artifact:")})
+        return tuple(p.wire_key for p in plans), tuple(arts)
+
+    def cache_generation(self) -> int:
+        """Compile-cache eviction count — the generation stamp that expires
+        frontend wire blobs when the executable LRU rotates (a cached
+        response's ``executable: hit`` provenance is only honest while the
+        executables it rode are still resident)."""
+        return self.cache.stats.evictions if self.cache is not None else 0
 
     # -- sweeps ------------------------------------------------------------
     def sweep(self, domains: Iterable[str], sizes: Iterable[int],
@@ -409,20 +445,74 @@ class EvaluationService:
 
 
 def wire_result(res: dict) -> dict:
-    """JSON-safe form of one evaluation result (arrays become lists)."""
+    """JSON-safe form of one evaluation result: arrays become lists, and a
+    ``dtype`` side-channel records each array's native dtype so the client
+    rehydrates exactly what the server computed (the binary codec carries
+    the same identity in its segment header)."""
     out = dict(res)
-    if "coords" in out:
-        out["coords"] = np.asarray(out["coords"]).tolist()
-    if "mask" in out:
-        out["mask"] = np.asarray(out["mask"]).tolist()
+    dtypes = {}
+    for field in ("coords", "mask"):
+        if out.get(field) is not None:
+            arr = np.asarray(out[field])
+            dtypes[field] = arr.dtype.name
+            out[field] = arr.tolist()
+    if dtypes:
+        out["dtype"] = dtypes
     return out
 
 
+def encoded_batch_response(evaluator: EvaluationService, cache,
+                           queries: Sequence[dict], *, single: bool,
+                           binary: bool) -> bytes:
+    """Evaluate a (single|batch) request straight to encoded response
+    bytes, through an optional :class:`~repro.serving.wire.WireCache` —
+    the one evaluate hot path both frontends share, so the threaded and
+    asyncio servers can never disagree on bytes.
+
+    Cache policy mirrors the async frontend's derive blob cache: only
+    responses whose every member rode an already-compiled executable
+    (``executable: hit``) are cached — a first-launch response truthfully
+    says ``miss`` exactly once, and repeats cache the honest rehydrated
+    bytes.  Entries are keyed by resolved executable group + λ-range and
+    generation-stamped against compile-cache eviction."""
+    from repro.serving import wire
+
+    cell = None
+    identity = evaluator.batch_cache_key(queries) if cache is not None \
+        else None
+    if identity is not None:
+        cell = ("bin" if binary else "json",
+                "single" if single else "batch", identity[0])
+        blob = cache.get(cell, evaluator.cache_generation())
+        if blob is not None:
+            return blob
+    results, meta = evaluator.evaluate_batch(list(queries))
+    if binary:
+        payload = results[0] if single \
+            else {"results": results, "batch": meta}
+        blob = wire.encode_frame(payload)
+    else:
+        payload = wire_result(results[0]) if single \
+            else {"results": [wire_result(r) for r in results],
+                  "batch": meta}
+        blob = json.dumps(payload, default=str).encode()
+    if cell is not None and all(r.get("executable") == "hit"
+                                for r in results):
+        cache.put(cell, blob, evaluator.cache_generation(),
+                  artifact_keys=identity[1])
+    return blob
+
+
 def hydrate_result(payload: dict) -> dict:
-    """Client-side inverse of :func:`wire_result`."""
+    """Client-side inverse of :func:`wire_result`.  Dtypes come from the
+    payload's ``dtype`` field; against an older server that doesn't send
+    one, int32 (those servers also computed int32) keeps the round-trip
+    faithful rather than guessed."""
     out = dict(payload)
-    if out.get("coords") is not None:
-        out["coords"] = np.asarray(out["coords"], dtype=np.int32)
-    if out.get("mask") is not None:
-        out["mask"] = np.asarray(out["mask"], dtype=np.int32)
+    dtypes = out.pop("dtype", None) or {}
+    for field, fallback in (("coords", np.int32), ("mask", np.int32)):
+        val = out.get(field)
+        if val is not None and not isinstance(val, np.ndarray):
+            out[field] = np.asarray(
+                val, dtype=np.dtype(dtypes.get(field, fallback)))
     return out

@@ -82,6 +82,7 @@ from repro.core.backends import (
 from repro.core.domains import DOMAINS
 from repro.obs import Observability
 from repro.obs import trace as obs_trace
+from repro.serving import wire
 from repro.serving.map_service import MappingService
 
 MAX_BODY_BYTES = 1 << 20  # a derive/grid request is tiny; refuse anything big
@@ -129,7 +130,7 @@ def map_error(e: BaseException) -> tuple[int, dict]:
 def collect_metrics(service: MappingService, http: dict, cluster=None,
                     forwarded: int = 0, forward_errors: int = 0,
                     evaluator=None, frontend: dict | None = None,
-                    router=None) -> dict:
+                    router=None, eval_wire=None) -> dict:
     """The shared /metrics payload shape — one builder for the threaded and
     asyncio frontends so scrapers see identical keys from either.  The
     per-endpoint ``http`` section comes from the observability plane's
@@ -170,6 +171,9 @@ def collect_metrics(service: MappingService, http: dict, cluster=None,
         ev = evaluator.stats_dict()
         out["compile_cache"] = ev.pop("compile_cache", None)
         out["evaluate"] = ev
+    if eval_wire is not None:
+        # the evaluate-plane response-bytes LRU (serving/wire.py)
+        out["evaluate_wire"] = eval_wire.stats_dict()
     return out
 
 
@@ -182,7 +186,8 @@ class MappingHTTPServer:
 
     def __init__(self, service: MappingService, host: str = "127.0.0.1",
                  port: int = 0, observability: bool = True,
-                 router=None, serve_delay: float = 0.0):
+                 router=None, serve_delay: float = 0.0,
+                 wire_cache_entries: int = 256):
         from repro.serving.router import RequestRouter
 
         self.service = service
@@ -201,6 +206,9 @@ class MappingHTTPServer:
         #: (an artificially slowed replica the selector must route around)
         self.serve_delay = max(0.0, float(serve_delay))
         self.obs = Observability(mode="threaded", enabled=observability)
+        #: encoded evaluate responses keyed by resolved executable group +
+        #: λ-range (binary and JSON cached separately; see serving/wire.py)
+        self.eval_wire = wire.WireCache(entries=wire_cache_entries)
         self._evaluator = None       # EvaluationService, built on first use
         self._evaluator_mu = threading.Lock()
         self._conn_sockets: set = set()  # live keep-alive connections
@@ -312,7 +320,7 @@ class MappingHTTPServer:
             self.service, self.obs.http_dict(), cluster=self.cluster,
             forwarded=self.forwarded, forward_errors=self.forward_errors,
             evaluator=evaluator, frontend=self.obs.frontend_dict(),
-            router=self.router)
+            router=self.router, eval_wire=self.eval_wire)
 
     def metrics_prometheus(self) -> str:
         """The same numbers as Prometheus text exposition: registered
@@ -389,6 +397,11 @@ def _make_handler(server: MappingHTTPServer):
             raw = self.rfile.read(length) if length else b""
             if not raw:
                 return {}
+            if wire.is_binary(self.headers.get("Content-Type")):
+                # a binary-framed request: malformed/truncated frames and
+                # unknown wire versions raise WireFormatError (a
+                # ValueError) -> structured 400 via _timed's map_error
+                return wire.decode_request(raw)
             body = json.loads(raw)
             if not isinstance(body, dict):
                 raise ValueError("request body must be a JSON object")
@@ -455,7 +468,8 @@ def _make_handler(server: MappingHTTPServer):
         def do_POST(self) -> None:  # noqa: N802
             if self.path == "/v1/derive":
                 self._timed("derive", self._derive)
-            elif self.path == "/v1/evaluate":
+            elif self.path == "/v1/evaluate" \
+                    or self.path.startswith("/v1/evaluate?"):
                 self._timed("evaluate", self._evaluate)
             elif self.path == "/v1/grid":
                 self._timed("grid", self._grid)
@@ -635,35 +649,105 @@ def _make_handler(server: MappingHTTPServer):
               {domain|key, tier?, n_points|extent, ...}   one query
               {"queries": [...]}                           heterogeneous batch
               {"sweep": {"domains": [...], "sizes": [...],
-                         "tier"?, "block_n"?, "interpret"?}}  NDJSON stream
+                         "tier"?, "block_n"?, "interpret"?}}  NDJSON or
+                                              binary frame stream
 
-            Unknown domains / artifact keys answer 404, malformed bodies
-            400 (both via ``_timed``'s exception mapping)."""
+            ``Accept: application/x-repro-binary`` (or ``?format=binary``,
+            or a binary-framed request body) answers binary frames instead
+            of JSON; responses come through the encoded-bytes LRU.  Unknown
+            domains / artifact keys answer 404, malformed bodies (JSON or
+            binary frame) 400 — both via ``_timed``'s exception mapping."""
             from repro.serving import evaluate as ev
 
+            binary = wire.wants_binary(self.headers.get("Accept"),
+                                       self.path,
+                                       self.headers.get("Content-Type"))
             body = self._read_body()
             evaluator = server.evaluator
             sweep = body.get("sweep")
             if sweep is not None:
                 if not isinstance(sweep, dict):
                     raise ValueError("'sweep' must be a JSON object")
-                self._evaluate_sweep(evaluator, sweep)
+                self._evaluate_sweep(evaluator, sweep, binary)
                 return
             queries = body.get("queries")
-            if queries is not None:
-                if not isinstance(queries, list):
-                    raise ValueError("'queries' must be a list")
-                results, meta = evaluator.evaluate_batch(queries)
-                self._send_json(200, {
-                    "results": [ev.wire_result(r) for r in results],
-                    "batch": meta,
-                })
+            if queries is not None and not isinstance(queries, list):
+                raise ValueError("'queries' must be a list")
+            if self._maybe_forward_evaluate(
+                    body, [body] if queries is None else queries, binary):
                 return
-            self._send_json(200, ev.wire_result(evaluator.evaluate(body)))
+            blob = ev.encoded_batch_response(
+                evaluator, server.eval_wire,
+                [body] if queries is None else queries,
+                single=queries is None, binary=binary)
+            self._send_body(200, blob, wire.CONTENT_TYPE if binary
+                            else "application/json")
 
-        def _evaluate_sweep(self, evaluator, sweep: dict) -> None:
-            """NDJSON-streamed grid sweep (same framing as /v1/grid): one
-            result line per (domain, n_points) cell as it resolves."""
+        def _maybe_forward_evaluate(self, body: dict, queries: list,
+                                    binary: bool) -> bool:
+            """One-hop forward for artifact-key evaluates this node neither
+            owns nor holds: the ring owner has the artifact resident (and
+            its compiled executables warm), so the hop beats a local 404.
+            The owner's bytes and Content-Type are relayed *verbatim* —
+            binary passthrough, a forwarded evaluate is never re-encoded.
+            Domain-only queries (any node computes ground truth) and
+            mixed-key batches serve locally."""
+            cluster = server.cluster
+            if cluster is None or self.headers.get(FORWARDED_HEADER):
+                return False
+            keys = {q.get("key") for q in queries if isinstance(q, dict)}
+            keys.discard(None)
+            if len(keys) != 1:
+                return False
+            key = keys.pop()
+            if not isinstance(key, str) or not store_mod.valid_key(key):
+                return False  # the evaluator raises the structured 400
+            if cluster.owns(key):
+                return False
+            store = server.service.store
+            if store is not None and key in store:
+                return False  # resident locally: serve, don't hop
+            candidates = cluster.replica_peers(key)
+            accept = wire.CONTENT_TYPE if binary else "application/json"
+
+            def hop(owner: str) -> tuple[int, bytes, str]:
+                req = urllib.request.Request(
+                    f"{owner}/v1/evaluate", data=json.dumps(body).encode(),
+                    method="POST",
+                    headers={"Content-Type": "application/json",
+                             "Accept": accept,
+                             FORWARDED_HEADER: "1",
+                             **obs_trace.wire_headers()})
+                try:
+                    with obs_trace.span("forward_evaluate", owner=owner), \
+                            urllib.request.urlopen(  # noqa: S310 — fleet URL
+                                req, timeout=server.forward_timeout) as resp:
+                        return (resp.status, resp.read(),
+                                resp.headers.get("Content-Type")
+                                or "application/json")
+                except urllib.error.HTTPError as e:
+                    return (e.code, e.read(),
+                            e.headers.get("Content-Type")
+                            or "application/json")
+
+            def on_error(owner: str, exc: Exception) -> None:
+                server.forward_errors += 1
+
+            answer = server.router.dispatch(key, candidates, hop,
+                                            on_error=on_error)
+            if answer is None:
+                return False  # every owner failed: serve (404) locally
+            status, payload, ctype = answer
+            server.forwarded += 1
+            self._send_body(status, payload, ctype)
+            return True
+
+        def _evaluate_sweep(self, evaluator, sweep: dict,
+                            binary: bool = False) -> None:
+            """Streamed grid sweep: one result per (domain, n_points) cell
+            as it resolves — NDJSON lines, or length-prefixed binary frames
+            when negotiated.  Both framings are close-delimited (length
+            unknowable up front)."""
             from repro.serving import evaluate as ev
 
             domains = sweep.get("domains")
@@ -676,23 +760,31 @@ def _make_handler(server: MappingHTTPServer):
                 domains, sizes, tier=sweep.get("tier", "map"),
                 block_n=sweep.get("block_n"),
                 interpret=sweep.get("interpret"))
+            if binary:
+                ctype = wire.STREAM_CONTENT_TYPE
+
+                def encode(res: dict) -> bytes:
+                    return wire.stream_chunk(wire.encode_frame(res))
+            else:
+                ctype = "application/x-ndjson"
+
+                def encode(res: dict) -> bytes:
+                    return (json.dumps(ev.wire_result(res)) + "\n").encode()
             self.send_response(200)
-            self.send_header("Content-Type", "application/x-ndjson")
+            self.send_header("Content-Type", ctype)
             # stream length unknowable up front: close-delimit (matches
             # /v1/grid; send_header flips close_connection)
             self.send_header("Connection", "close")
             self.end_headers()
             try:
                 for res in cells:
-                    line = json.dumps(ev.wire_result(res)) + "\n"
-                    self.wfile.write(line.encode())
+                    self.wfile.write(encode(res))
                     self.wfile.flush()
             except (BrokenPipeError, ConnectionResetError):
                 raise
             except Exception as e:  # noqa: BLE001 — headers are gone
                 self.wfile.write(
-                    (json.dumps({"error": f"{type(e).__name__}: {e}"}) +
-                     "\n").encode())
+                    encode({"error": f"{type(e).__name__}: {e}"}))
 
         def _artifact(self) -> None:
             key = self._key_from_path("/v1/artifact/")
@@ -731,6 +823,9 @@ def _make_handler(server: MappingHTTPServer):
                                                "(REPRO_ARTIFACT_CACHE=off)",
                                       "key": key})
                 return
+            # cached evaluate responses embedding this artifact's
+            # coordinates must die with it
+            server.eval_wire.invalidate_artifact(key)
             if store.delete(key):
                 self._send_json(200, {"key": key, "deleted": True})
             else:
